@@ -1,0 +1,305 @@
+"""Analytic per-cell cost model — loop-corrected FLOPs / HBM bytes.
+
+Why analytic: XLA's aggregate ``cost_analysis()`` counts while-loop bodies
+ONCE (verified with a controlled scan test — see EXPERIMENTS.md §Dry-run), so
+the compiled numbers undercount layer scans, grad-accumulation scans and
+attention q-block scans by their trip products.  The collective term IS
+loop-corrected structurally (dryrun.py rebuilds the HLO call graph); for the
+compute and memory terms we use closed forms derived from the same configs
+the models are built from, with the crypto cost modeled at the ALU-op level
+of the actual Threefry/M31 implementations.
+
+Conventions:
+  * train flops multiplier: fwd(2ND) + bwd(4ND) + full-remat refwd(2ND) = 8ND
+    per matmul-param N and token D; MODEL_FLOPS is the standard 6ND, so the
+    reported useful-fraction naturally shows the remat overhead (0.75).
+  * crypto: Threefry-2x32 keystream ~ 100 ALU ops / 8B block = 12.5 op/B,
+    + XOR/expand ~ 1 op/B  => CTR ~ 13.5 op/B;
+    M31 multilinear MAC ~ 25 ops / 4B word + tree adds ~ 2 op/B => +8.3 op/B.
+  * HBM bytes: weight streaming per microbatch pass (fwd/bwd/refwd = 3),
+    sealed-state read+write, activation residual save/load, KV-cache traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+CTR_OPS_PER_BYTE = 13.5
+MAC_OPS_PER_BYTE = 8.3
+
+# hardware constants (TPU v5e)
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # B/s / chip
+LINK_BW = 50e9            # B/s / link (ICI)
+
+
+def _p(cfg):
+    """matmul params per layer + embed/unembed, by family.  Returns dict."""
+    D, F, V = cfg.d_model, cfg.d_ff, cfg.vocab
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    attn = D * (H + 2 * K) * hd + H * hd * D
+    out = {"embed": V * D, "unembed": V * D}
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        out["layer"] = attn + 3 * D * F
+        out["layers_total"] = cfg.n_layers * out["layer"]
+        out["active_layer"] = out["layer"]
+    elif fam == "moe":
+        m = cfg.moe
+        moe_p = m.n_experts * 3 * D * F + D * m.n_experts
+        shared = 3 * D * (m.d_ff_shared or F) if m.shared_expert else 0
+        moe_active = m.top_k * 3 * D * F + D * m.n_experts + shared
+        if m.moe_every == 2:
+            dense_l = attn + 3 * D * (m.d_ff_dense or 2 * F)
+            moe_l = attn + moe_p + shared
+            out["layers_total"] = (cfg.n_layers // 2) * (dense_l + moe_l)
+            out["active_layer"] = (dense_l + attn + moe_active + shared) / 2
+        else:
+            out["layers_total"] = cfg.n_layers * (attn + moe_p + shared)
+            out["active_layer"] = attn + moe_active
+        out["layer"] = out["layers_total"] / cfg.n_layers
+    elif fam == "rwkv":
+        hd_r = cfg.rwkv.head_dim
+        tm = 5 * D * D + D * cfg.rwkv.decay_lora * 2 + D * 32 * 5 * 2
+        cm = 2 * D * F + D * D
+        out["layer"] = tm + cm
+        out["layers_total"] = cfg.n_layers * out["layer"]
+        out["active_layer"] = out["layer"]
+    elif fam == "hybrid":
+        s = cfg.ssm
+        di = s.expand * D
+        m2 = D * (2 * di + 2 * s.d_state + (di // s.head_dim)) + di * D \
+            + s.conv_width * (di + 2 * s.d_state)
+        shared_block = 2 * D * D + attn + 3 * D * F   # ONE shared attn block
+        out["layer"] = m2
+        out["layers_total"] = cfg.n_layers * m2 + shared_block  # params: once
+        # flops: the shared block runs every attn_every layers
+        out["active_layer"] = m2 + shared_block / cfg.hybrid.attn_every
+    elif fam == "encdec":
+        enc_l = attn + 3 * D * F
+        dec_l = 2 * attn + 3 * D * F
+        out["layers_total"] = (cfg.encdec.n_enc_layers * enc_l
+                               + cfg.encdec.n_dec_layers * dec_l)
+        out["layer"] = out["layers_total"] / max(
+            cfg.encdec.n_enc_layers + cfg.encdec.n_dec_layers, 1)
+        out["active_layer"] = out["layer"]
+    else:
+        raise ValueError(fam)
+    return out
+
+
+def param_count(cfg) -> float:
+    p = _p(cfg)
+    n = p["layers_total"] + p["embed"]
+    if not cfg.tie_embeddings:
+        n += p["unembed"]
+    return float(n)
+
+
+def active_param_count(cfg) -> float:
+    p = _p(cfg)
+    nl = (cfg.n_layers if cfg.family != "encdec"
+          else cfg.encdec.n_enc_layers + cfg.encdec.n_dec_layers)
+    return float(p["active_layer"] * nl + p["embed"] + p["unembed"])
+
+
+def _attn_flops_fwd(cfg, tokens, ctx_len, causal=True):
+    """QK^T + PV flops for `tokens` queries against ctx_len keys."""
+    H, hd = cfg.n_heads, cfg.hd
+    f = 4.0 * tokens * ctx_len * H * hd
+    return f * (0.5 if causal else 1.0)
+
+
+def _scan_flops_fwd(cfg, tokens):
+    """Recurrent-state flops (rwkv WKV / mamba SSD), fwd."""
+    if cfg.family == "rwkv":
+        hd = cfg.rwkv.head_dim
+        Hh = cfg.d_model // hd
+        return 8.0 * tokens * Hh * hd * hd
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        di = s.expand * cfg.d_model
+        Hs = di // s.head_dim
+        return 6.0 * tokens * Hs * s.head_dim * s.d_state
+    return 0.0
+
+
+@dataclasses.dataclass
+class CellCost:
+    flops: float              # loop-corrected, global (all chips)
+    hbm_bytes: float          # global
+    crypto_flops: float       # subset of flops attributable to seal/unseal
+    crypto_bytes: float       # bytes passed through the cipher/MAC
+    model_flops: float        # 6*N*D train / 2*N*D serve (N_active for MoE)
+    min_hbm_bytes: float = 0.0  # irreducible traffic (roofline floor)
+
+    def per_chip(self, n_chips: int):
+        return (self.flops / n_chips, self.hbm_bytes / n_chips)
+
+
+def _state_bytes(cfg, opt_dtype_bytes=4):
+    n = param_count(cfg)
+    pb = 2  # bf16 params
+    return n * (pb + 2 * opt_dtype_bytes)
+
+
+def _crypto(cfg, sealed_bytes, authed_bytes):
+    flops = sealed_bytes * CTR_OPS_PER_BYTE + authed_bytes * MAC_OPS_PER_BYTE
+    return flops
+
+
+def cost_cell(cfg, shape, security: str = "trusted",
+              microbatch: int = 0, opt_state_dtype: str = "float32",
+              acc_dtype: str = "float32", fused_crypto: bool = False) -> CellCost:
+    """Global analytic cost of one (arch x shape x security) step."""
+    N = param_count(cfg)
+    GB, S = shape.global_batch, shape.seq_len
+    D = cfg.d_model
+    p = _p(cfg)
+    N_mat = p["layers_total"]                       # matmul params (stream)
+    N_act = active_param_count(cfg)
+    ob = {"float32": 4, "bfloat16": 2}[opt_state_dtype]
+    ab = {"float32": 4, "bfloat16": 2}[acc_dtype]
+    sealed = security in ("ctr", "trusted")
+    authed = security == "trusted"
+
+    nl_all = (cfg.n_layers if cfg.family != "encdec"
+              else cfg.encdec.n_enc_layers + cfg.encdec.n_dec_layers)
+    # flops follow the ACTIVE path (MoE computes top-k + capacity slots,
+    # not all experts); HBM weight streaming follows ALL matmul params.
+    N_flops = p["active_layer"] * nl_all
+    if shape.kind == "train":
+        tokens = GB * S
+        mb = microbatch or GB
+        n_accum = GB // mb
+        # matmul path: fwd 2 + bwd 4 + remat refwd 2 = 8 per matmul param
+        f_mat = 8.0 * (N_flops + p["unembed"]) * tokens
+        nl = nl_all
+        f_attn = 0.0
+        if cfg.family in ("dense", "vlm", "moe", "encdec"):
+            f_attn = 4.0 * nl * _attn_flops_fwd(cfg, tokens, S)
+        if cfg.family == "hybrid":
+            f_attn = 4.0 * (cfg.n_layers // cfg.hybrid.attn_every) \
+                * _attn_flops_fwd(cfg, tokens, S)
+        f_scan = 4.0 * cfg.n_layers * _scan_flops_fwd(cfg, tokens) \
+            if cfg.family in ("rwkv", "hybrid") else 0.0
+        # crypto: state unseal + reseal (params bf16 + mu/nu)
+        state_b = N * 2 * 2 + N * ob * 2 * 2 if sealed else 0.0
+        c_flops = _crypto(cfg, state_b, state_b if authed else 0.0)
+        flops = f_mat + f_attn + f_scan + c_flops
+        # HBM: weights streamed 3x per microbatch + state rw + residuals
+        w_stream = 3.0 * n_accum * (N_mat + p["unembed"]) * 2
+        state_rw = N * (2 * 2 + 2 * ob) * 2           # read + write, p+mu+nu
+        grads_rw = 2.0 * N * ab * n_accum             # accumulator traffic
+        resid = 4.0 * nl * tokens * D * 2             # save+load residuals
+        logits = 2.0 * tokens * cfg.vocab * 2 / max(n_accum, 1) * n_accum
+        hbm = w_stream + state_rw + grads_rw + resid + logits \
+            + (state_b * 0.003 if sealed else 0.0)    # tag sidecar ~0.3%
+        if sealed and not fused_crypto:
+            hbm += state_b  # unfused unseal materializes the plaintext state
+        model_flops = 6.0 * (N_act if cfg.family == "moe" else N) * tokens
+        min_hbm = state_rw + resid  # weights resident, no re-streaming
+        return CellCost(flops, hbm, c_flops, state_b, model_flops, min_hbm)
+
+    if shape.kind == "prefill":
+        tokens = GB * S
+        f_mat = 2.0 * N_flops * tokens + 2.0 * p["unembed"] * GB
+        nl = (cfg.n_layers if cfg.family != "encdec"
+              else cfg.encdec.n_enc_layers + cfg.encdec.n_dec_layers)
+        f_attn = (nl * _attn_flops_fwd(cfg, tokens, S)
+                  if cfg.family in ("dense", "vlm", "moe", "encdec") else
+                  (cfg.n_layers // cfg.hybrid.attn_every)
+                  * _attn_flops_fwd(cfg, tokens, S)
+                  if cfg.family == "hybrid" else 0.0)
+        f_scan = cfg.n_layers * _scan_flops_fwd(cfg, tokens) \
+            if cfg.family in ("rwkv", "hybrid") else 0.0
+        cache_b = _cache_bytes(cfg, GB, S)
+        params_b = N * 2 if sealed else 0.0
+        c_b = params_b + (cache_b if sealed else 0.0)
+        c_flops = _crypto(cfg, c_b, params_b if authed else 0.0)
+        flops = f_mat + f_attn + f_scan + c_flops
+        hbm = (N_mat + p["unembed"]) * 2 + 2.0 * tokens * D * 2 * nl \
+            + cache_b * 2 + (params_b if sealed else 0.0)
+        if sealed and not fused_crypto:
+            hbm += params_b + cache_b  # plaintext materialization round-trip
+        model_flops = 2.0 * (N_act if cfg.family == "moe" else N) * tokens
+        min_hbm = (N_mat + p["unembed"]) * 2 + cache_b
+        return CellCost(flops, hbm, c_flops, c_b, model_flops, min_hbm)
+
+    # decode: ONE token against a seq_len cache/state
+    tokens = GB
+    f_mat = 2.0 * N_act * tokens
+    nl = (cfg.n_layers if cfg.family != "encdec"
+          else cfg.encdec.n_dec_layers)
+    if cfg.family in ("dense", "vlm", "moe"):
+        f_attn = nl * _attn_flops_fwd(cfg, tokens, S, causal=False)
+    elif cfg.family == "encdec":
+        f_attn = nl * 2 * _attn_flops_fwd(cfg, tokens, S, causal=False)
+    elif cfg.family == "hybrid":
+        f_attn = (cfg.n_layers // cfg.hybrid.attn_every) \
+            * _attn_flops_fwd(cfg, tokens, S, causal=False)
+    else:
+        f_attn = 0.0
+    f_scan = cfg.n_layers * _scan_flops_fwd(cfg, tokens) \
+        if cfg.family in ("rwkv", "hybrid") else 0.0
+    cache_b = _cache_bytes(cfg, GB, S)
+    params_b = N * 2
+    c_b = (params_b + cache_b) if sealed else 0.0
+    c_flops = _crypto(cfg, c_b, params_b if authed else 0.0)
+    flops = f_mat + f_attn + f_scan + c_flops
+    # ciphertext read replaces the plain read (counter mode is size-
+    # preserving) — but the UNFUSED jnp path materializes the decrypted
+    # cache+params in HBM (write + re-read).  The fused Pallas kernels
+    # (sealed_matmul / sealed_attention) decrypt in VMEM and remove that
+    # round-trip entirely — the central §Perf optimization.
+    hbm = params_b + cache_b
+    if sealed and not fused_crypto:
+        hbm += 2.0 * c_b
+    model_flops = 2.0 * (N_act if cfg.family == "moe" else N) * tokens
+    min_hbm = params_b + cache_b
+    return CellCost(flops, hbm, c_flops, c_b, model_flops, min_hbm)
+
+
+def _cache_bytes(cfg, B, S) -> float:
+    """Decode-state bytes for one full cache/state."""
+    if cfg.family in ("dense", "vlm", "moe"):
+        return 2.0 * cfg.n_layers * B * S * cfg.n_kv_heads * cfg.hd * 2
+    if cfg.family == "encdec":
+        return 4.0 * cfg.encdec.n_dec_layers * B * S * cfg.n_kv_heads * cfg.hd * 2
+    if cfg.family == "rwkv":
+        hd = cfg.rwkv.head_dim
+        Hh = cfg.d_model // hd
+        return cfg.n_layers * B * (Hh * hd * hd * 4 + 2 * cfg.d_model * 2)
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        di = s.expand * cfg.d_model
+        Hs = di // s.head_dim
+        ssm = cfg.n_layers * B * (Hs * s.head_dim * s.d_state * 4
+                                  + (s.conv_width - 1) * (di + 2 * s.d_state) * 2)
+        ninv = -(-cfg.n_layers // cfg.hybrid.attn_every)
+        kv = 2.0 * ninv * B * S * cfg.n_kv_heads * cfg.hd * 2
+        return ssm + kv
+    raise ValueError(cfg.family)
+
+
+def roofline_terms(cost: CellCost, collective_link_bytes: float,
+                   n_chips: int = 256) -> dict:
+    """The three §Roofline terms, in seconds."""
+    t_compute = cost.flops / n_chips / PEAK_FLOPS
+    t_memory = cost.hbm_bytes / n_chips / HBM_BW
+    t_coll = collective_link_bytes / LINK_BW  # already per-device bytes
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    bound = max(t_compute, t_memory, t_coll)
+    # roofline floor: the algorithm cannot beat its model flops at peak NOR
+    # its irreducible HBM traffic at full bandwidth — fraction of that ideal.
+    t_ideal = max(cost.model_flops / n_chips / PEAK_FLOPS,
+                  cost.min_hbm_bytes / n_chips / HBM_BW)
+    return {
+        "t_compute": t_compute, "t_memory": t_memory, "t_collective": t_coll,
+        "dominant": dominant,
+        "useful_fraction": cost.model_flops / max(cost.flops, 1.0),
+        "roofline_fraction": t_ideal / max(bound, 1e-30),
+    }

@@ -1,0 +1,103 @@
+"""Render EXPERIMENTS.md data sections from results/*.json(l).
+
+Replaces the blocks between <!-- BEGIN:<name> --> / <!-- END:<name> --> in
+EXPERIMENTS.md for: dryrun, roofline, hillclimb.  Idempotent.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+
+def _gb(x):
+    return f"{x/1e9:.2f}"
+
+
+def render_dryrun(path="results/dryrun.jsonl") -> str:
+    rows = [json.loads(l) for l in open(path)] if os.path.exists(path) else []
+    out = ["| mesh | arch | shape | status | HLO flops* | coll bytes/dev | "
+           "args GB/dev | compile s |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        if r["status"] == "skip":
+            out.append(f"| {r['mesh']} | {r['arch']} | {r['shape']} | "
+                       f"skip: {r['reason'][:40]} | | | | |")
+            continue
+        if r["status"] == "fail":
+            out.append(f"| {r['mesh']} | {r['arch']} | {r['shape']} | "
+                       f"FAIL: {r.get('error','')[:60]} | | | | |")
+            continue
+        out.append(
+            f"| {r['mesh']} | {r['arch']} | {r['shape']} | ok | "
+            f"{r.get('flops', 0):.2e} | {_gb(r.get('collective_link_bytes', 0))} | "
+            f"{r.get('args_bytes_per_device', 0)/2**30:.2f} | "
+            f"{r.get('compile_s', 0)} |")
+    n_ok = sum(1 for r in rows if r["status"] == "ok")
+    n_skip = sum(1 for r in rows if r["status"] == "skip")
+    n_fail = sum(1 for r in rows if r["status"] == "fail")
+    out.append("")
+    out.append(f"*raw XLA aggregate (loop bodies counted once — see note); "
+               f"totals: ok={n_ok} skip={n_skip} fail={n_fail}*")
+    return "\n".join(out)
+
+
+def render_roofline(path="results/roofline.json") -> str:
+    if not os.path.exists(path):
+        return "(run benchmarks/roofline.py)"
+    rows = json.load(open(path))
+    out = ["| arch | shape | t_compute s | t_memory s | t_collective s | "
+           "dominant | MODEL/HLO | roofline | next move |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | skip: "
+                       f"{r['reason'][:45]} | | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.3g} | "
+            f"{r['t_memory']:.3g} | {r['t_collective']:.3g} | "
+            f"{r['dominant']} | {r['useful_fraction']:.2f} | "
+            f"{100*r['roofline_fraction']:.1f}% | {r['suggestion'][:70]} |")
+    return "\n".join(out)
+
+
+def render_hillclimb(path="results/hillclimb.json") -> str:
+    if not os.path.exists(path):
+        return "(run benchmarks/hillclimb.py)"
+    log = json.load(open(path))
+    out = []
+    for section, steps in log.items():
+        out.append(f"**{section}**")
+        out.append("")
+        out.append("| variant | t_compute | t_memory | t_collective | "
+                   "dominant | roofline |")
+        out.append("|---|---|---|---|---|---|")
+        for s in steps:
+            out.append(f"| {s['label']} | {s['t_compute']:.3g} | "
+                       f"{s['t_memory']:.3g} | {s['t_collective']:.3g} | "
+                       f"{s['dominant']} | {100*s['roofline_fraction']:.1f}% |")
+        out.append("")
+    return "\n".join(out)
+
+
+def main():
+    path = "EXPERIMENTS.md"
+    text = open(path).read()
+    for name, render in (("dryrun", render_dryrun),
+                         ("roofline", render_roofline),
+                         ("hillclimb", render_hillclimb)):
+        begin, end = f"<!-- BEGIN:{name} -->", f"<!-- END:{name} -->"
+        if begin in text:
+            pat = re.compile(re.escape(begin) + ".*?" + re.escape(end),
+                             re.S)
+            text = pat.sub(begin + "\n" + render() + "\n" + end, text)
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

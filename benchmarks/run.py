@@ -1,0 +1,39 @@
+"""Benchmark harness — one function per paper table / analysis.
+
+  table1_vta   paper Table 1 (VTA cycle model vs the paper's RTL numbers)
+  micro        seal/unseal throughput, chunk-size trade-off (paper §3.3.2),
+               trust-establishment latency (§3.2)
+  sealed_lm    Table-1 analogue measured on an LM (none/ctr/trusted)
+  roofline     §Roofline three-term table for all 40 cells (needs
+               results/dryrun.jsonl from repro.launch.dryrun)
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+
+def main() -> None:
+    import table1_vta
+    import micro
+    import sealed_lm
+
+    print("=" * 72)
+    table1_vta.run()
+    print("=" * 72)
+    micro.run()
+    print("=" * 72)
+    sealed_lm.run()
+    print("=" * 72)
+    if os.path.exists("results/dryrun.jsonl"):
+        import roofline
+        roofline.run()
+    else:
+        print("roofline: results/dryrun.jsonl not found — run "
+              "`python -m repro.launch.dryrun --all --out results/dryrun.jsonl`")
+
+
+if __name__ == '__main__':
+    main()

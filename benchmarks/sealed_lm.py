@@ -1,0 +1,78 @@
+"""Table-1 analogue measured on a modern LM (smoke scale, real wall time).
+
+The paper's three columns (none / ctr / trusted) applied to a transformer's
+train and decode steps — the equivalent of Table 1 for the LM workloads this
+framework targets.  Decode is the memory-intensity-bound case (the paper's FC
+rows); train is the compute-bound case (the conv rows); the slowdown ordering
+must reproduce the paper's structure.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import SecurityConfig
+from repro.core import sealed as sealed_lib
+from repro.data import SyntheticLM
+from repro.models import registry
+from repro.optim import AdamW
+from repro.train import make_train_step, seal_state
+
+
+def _time(fn, *args, iters=3):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def run(print_csv=True, arch="granite-3-2b"):
+    cfg = configs.get_config(arch, smoke=True)
+    m = registry.get_model(cfg)
+    key = jnp.array([3, 7], jnp.uint32)
+    params = m.init(jax.random.PRNGKey(0), cfg)
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=64, batch=8, seed=0)
+    mb = {k: jnp.asarray(v) for k, v in data.microbatches_at(0, 2).items()}
+    opt = AdamW(lr=1e-3)
+
+    rows = []
+    if print_csv:
+        print(f"# sealed-LM step latency ({arch} smoke config, this host)")
+        print("name,us_per_call,derived")
+    base = {}
+    for level, sec in (("none", SecurityConfig.off()),
+                       ("ctr", SecurityConfig.ctr_only()),
+                       ("trusted", SecurityConfig())):
+        state = seal_state(opt.init(params), key, sec)
+        step = jax.jit(make_train_step(m, cfg, opt, sec, key))
+        dt = _time(step, state, mb)
+        base.setdefault("train", dt if level == "none" else base.get("train"))
+        slow = dt / base["train"]
+        rows.append((f"train_{level}", dt * 1e6, slow))
+        if print_csv:
+            print(f"train_{level},{dt*1e6:.0f},{slow:.3f}x")
+
+    # decode: one token against a filled cache
+    tok = jnp.zeros((4,), jnp.int32)
+    prompt = {"tokens": jnp.zeros((4, 48), jnp.int32)}
+    for level in ("none", "ctr"):
+        sealed = level != "none"
+        ctx = (key, jnp.uint32(1)) if sealed else None
+        _, cache = jax.jit(
+            lambda p, b: m.prefill(p, cfg, b, 64, seal_ctx=ctx))(params, prompt)
+        dec = jax.jit(lambda p, c, t: m.decode_step(p, cfg, c, t, seal_ctx=ctx))
+        dt = _time(dec, params, cache, tok)
+        base.setdefault("dec", dt if level == "none" else base.get("dec"))
+        slow = dt / base["dec"]
+        rows.append((f"decode_{level}", dt * 1e6, slow))
+        if print_csv:
+            print(f"decode_{level},{dt*1e6:.0f},{slow:.3f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

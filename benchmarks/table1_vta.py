@@ -1,0 +1,27 @@
+"""Paper Table 1: VTA / VTA-trusted / VTA-ctr latency + our tree-MAC column."""
+from __future__ import annotations
+
+from repro.accel import VTAConfig, workloads
+from repro.accel.vta_sim import table_row
+
+
+def run(print_csv=True):
+    cfg = VTAConfig()
+    rows = []
+    if print_csv:
+        print("# Table 1 reproduction (cycle model vs paper RTL measurement)")
+        print("name,vta_cycles,paper_vta,trusted_x,paper_trusted_x,"
+              "ctr_x,paper_ctr_x,tree_mac_x")
+    for w in workloads.TABLE1:
+        r = table_row(cfg, w)
+        pv, pt, pc = workloads.PAPER_TABLE1[w.name]
+        rows.append(r)
+        if print_csv:
+            print(f"{w.name},{r['vta']:.0f},{pv},{r['trusted_slowdown']:.3f},"
+                  f"{pt},{r['ctr_slowdown']:.3f},{pc},"
+                  f"{r['tree_slowdown']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,74 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+# ^ must precede jax import: this example emulates a 2-pod mesh on 8 host devices
+
+"""Hierarchical multi-pod training with SEALED cross-pod collectives.
+
+Trust boundary: intra-pod ICI is trusted; the cross-pod DCN link is the
+paper's snoopable bus.  Per-pod gradients are int8-compressed, CTR-sealed
+with (step, pod)-unique nonces, all-gathered across the 'pod' axis, and
+unsealed + combined inside each pod's trust boundary.
+
+Run:  PYTHONPATH=src python examples/multipod_training.py
+"""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.core import SecureChannel
+from repro.data import SyntheticLM
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_smoke_mesh
+from repro.models import registry
+from repro.parallel import sharding as shd
+from repro.parallel.collectives import make_crosspod_grad_hook
+from repro.train import make_train_step, seal_state
+
+
+def main():
+    n_pods = 2
+    mesh = make_smoke_mesh(8, pods=n_pods)   # (pod=2, data=2, model=2)
+    print("mesh:", dict(mesh.shape))
+
+    cell = steps_lib.make_cell("granite-3-2b", "train_4k", smoke=True)
+    cfg, model = cell.cfg, cell.model
+    channel = SecureChannel.establish()
+
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    state = seal_state(cell.opt.init(params), channel.jkey, channel.config)
+
+    # per-pod step: loss/grads over the pod's batch shard; sealed combine
+    hook = make_crosspod_grad_hook(channel.jkey, n_pods, sealed=True,
+                                   quantize=True)
+    inner = make_train_step(model, cfg, cell.opt, channel.config,
+                            channel.jkey, grad_hook=hook)
+
+    state_specs = jax.tree_util.tree_map(lambda _: P(), state)
+    step = jax.jit(jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(state_specs, {"tokens": P(None, "pod"),
+                                "labels": P(None, "pod")}),
+        out_specs=(state_specs, P()),
+        axis_names={"pod"}, check_vma=False))
+
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=32, batch=8)
+    losses = []
+    with shd.use(shd.make_ctx(mesh, manual_axes=("pod",))):
+        for i in range(8):
+            mb = {k: jnp.asarray(v) for k, v in
+                  data.microbatches_at(i, 2).items()}
+            state, metrics = step(state, mb)
+            losses.append(float(metrics["loss"]))
+            print(f"step {i}: loss={losses[-1]:.4f} "
+                  f"seal_ok={bool(metrics['seal_ok'])}")
+    assert losses[-1] < losses[0]
+    print("sealed cross-pod training: loss decreased "
+          f"({losses[0]:.3f} -> {losses[-1]:.3f})")
+
+
+if __name__ == "__main__":
+    main()

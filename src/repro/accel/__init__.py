@@ -1,0 +1,2 @@
+from .vta_sim import VTAConfig, simulate, Protection  # noqa: F401
+from . import workloads  # noqa: F401

@@ -1,0 +1,23 @@
+"""repro.core — the paper's contribution: sealed offload to a trusted accelerator.
+
+Layers (paper section in parens):
+  trust      attestation + signed ephemeral DH -> session key K   (§3.2)
+  cipher     counter-mode ARX keystream, seal/unseal = XOR        (§3.3, Rule 1/2)
+  mac        chunked multilinear tree MAC over ciphertext         (§3.3.2, §4.3)
+  sealed     SealedTensor: ciphertext + tag sidecar + nonce       (§3.3)
+  registers  launch-descriptor MAC + nonce via untrusted driver   (§3.3.3, Rule 3)
+  channel    SecureChannel: upload/download/launch end-to-end     (Fig. 1/3)
+  policy     NONE / CTR / TRUSTED per tensor class                (§4.2 configs)
+  overhead   analytical slowdown model                            (§3.4)
+"""
+from . import cipher, mac, overhead, policy, registers, sealed, trust
+from .channel import SecureChannel, poison_unless
+from .policy import Protection, SealedSpec, SecurityConfig
+from .sealed import SealedTensor, seal, seal_tree, unseal, unseal_tree
+
+__all__ = [
+    "cipher", "mac", "overhead", "policy", "registers", "sealed", "trust",
+    "SecureChannel", "poison_unless", "Protection", "SealedSpec",
+    "SecurityConfig", "SealedTensor", "seal", "seal_tree", "unseal",
+    "unseal_tree",
+]

@@ -1,0 +1,111 @@
+"""SecureChannel — the end-to-end secure offload path (paper Figure 1/3).
+
+Ties together the substrate:
+  trust.py      -> session key K between enclave and accelerator
+  sealed.py     -> Rules 1 & 2: code/data sealed in untrusted memory
+  registers.py  -> Rule 3: launch-descriptor MAC + nonce via the untrusted driver
+
+``SecureChannel.launch`` is the JAX analogue of "runtime writes registers, then
+the MAC register, then the driver kicks the accelerator": it MACs the launch
+descriptor, the device register file verifies it, then the jitted step runs
+over sealed operands and gates its outputs on the in-graph verification
+predicate (a tampered operand poisons the result with NaNs instead of silently
+computing on attacker-controlled data).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import sealed as sealed_lib
+from . import trust
+from .policy import SealedSpec, SecurityConfig
+from .registers import DeviceRegisterFile, HostRegisterFile
+
+
+def poison_unless(ok: jax.Array, tree):
+    """Gate a pytree of outputs on a verification predicate.
+
+    ok=False => every float leaf becomes NaN, every int leaf becomes the
+    sentinel minimum.  This is the software analogue of the accelerator
+    refusing to use unauthenticated data: nothing useful leaves the device.
+    """
+    def gate(x):
+        if not isinstance(x, jax.Array) and not hasattr(x, "dtype"):
+            return x
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return jnp.where(ok, x, jnp.nan)
+        if jnp.issubdtype(x.dtype, jnp.integer):
+            return jnp.where(ok, x, jnp.iinfo(x.dtype).min)
+        return x
+    return jax.tree_util.tree_map(gate, tree)
+
+
+@dataclasses.dataclass
+class SecureChannel:
+    """Host <-> accelerator channel over untrusted memory and an untrusted driver."""
+    key_words: np.ndarray           # uint32[2] data-plane cipher key
+    key_bytes: bytes                # control-plane HMAC key (Rule 3)
+    config: SecurityConfig
+    host_regs: HostRegisterFile = None
+    device_regs: DeviceRegisterFile = None
+    _nonce_counter: int = 0
+
+    @classmethod
+    def establish(cls, config: SecurityConfig | None = None, device_id: str = "tpu-0"):
+        """Run the full paper §3.2 handshake and open a channel."""
+        config = config or SecurityConfig()
+        host, accel, key_words = trust.establish_session(device_id)
+        kb = host.session_key
+        return cls(key_words=key_words, key_bytes=kb, config=config,
+                   host_regs=HostRegisterFile(key=kb),
+                   device_regs=DeviceRegisterFile(key=kb))
+
+    @classmethod
+    def insecure(cls, config: SecurityConfig | None = None):
+        """Protection.NONE channel for baselines (the paper's plain-VTA row)."""
+        config = config or SecurityConfig.off()
+        kb = b"\x00" * 32
+        kw = np.zeros((2,), np.uint32)
+        return cls(key_words=kw, key_bytes=kb, config=config,
+                   host_regs=HostRegisterFile(key=kb),
+                   device_regs=DeviceRegisterFile(key=kb))
+
+    # -- data plane -----------------------------------------------------
+    @property
+    def jkey(self) -> jax.Array:
+        return jnp.asarray(self.key_words, jnp.uint32)
+
+    def fresh_nonce(self) -> int:
+        self._nonce_counter += 1000003  # stride >> max per-tree leaves
+        return self._nonce_counter
+
+    def upload(self, x: jax.Array, spec: SealedSpec | None = None):
+        """Host -> untrusted HBM: seal a tensor (Rule 1)."""
+        spec = spec or self.config.weights
+        return sealed_lib.seal(x, self.jkey, self.fresh_nonce(), spec)
+
+    def upload_tree(self, tree, spec: SealedSpec | None = None):
+        spec = spec or self.config.weights
+        return sealed_lib.seal_tree(tree, self.jkey, spec, self.fresh_nonce())
+
+    def download(self, st) -> jax.Array:
+        """Untrusted HBM -> host enclave: unseal + verify (strict)."""
+        x, ok = sealed_lib.unseal(st, self.jkey)
+        if not bool(ok):
+            raise trust.SecurityError("download integrity check failed")
+        return x
+
+    # -- launch path (Rule 3) --------------------------------------------
+    def launch(self, step_fn: Callable, descriptor: dict[str, Any], *args, **kwargs):
+        """Protected dispatch: MAC the descriptor, verify on 'device', run."""
+        if self.config.protect_launch:
+            state, nonce, tag = self.host_regs.write(**descriptor)
+            # the untrusted driver would carry (state, nonce, tag) via MMIO;
+            # the device-side register file verifies before the core starts.
+            self.device_regs.commit(state, nonce, tag)
+        return step_fn(*args, **kwargs)

@@ -1,0 +1,1 @@
+from .pipeline import SyntheticLM, sealed_host_batches  # noqa: F401

@@ -1,0 +1,31 @@
+"""Pallas TPU kernels for the sealed-offload hot paths.
+
+Each kernel directory holds:
+    kernel.py  pl.pallas_call + BlockSpec VMEM tiling (the TPU target)
+    ops.py     jit'd wrapper with backend selection
+    ref.py     pure-jnp oracle (bit-exact reference; also the dry-run path)
+
+Backend selection (this container is CPU-only):
+    'pallas'    real Mosaic lowering — used on TPU hardware
+    'interpret' pallas_call(..., interpret=True) — CPU correctness tests
+    'jnp'       the ref.py oracle — default on CPU, used by the 512-device
+                dry-run compile (Mosaic kernels cannot lower to CPU)
+"""
+from __future__ import annotations
+
+import jax
+
+_BACKEND = None
+
+
+def default_backend() -> str:
+    global _BACKEND
+    if _BACKEND is None:
+        _BACKEND = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return _BACKEND
+
+
+def set_backend(b: str) -> None:
+    global _BACKEND
+    assert b in ("pallas", "interpret", "jnp")
+    _BACKEND = b

@@ -1,0 +1,78 @@
+"""Shared in-kernel primitives: Threefry-2x32 rounds and M31 modular ops.
+
+These are plain jnp expressions usable both inside Pallas kernel bodies and
+in the jnp reference paths — guaranteeing bit-exact agreement between the
+kernel and its oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_ROTS_A = (13, 15, 26, 6)
+_ROTS_B = (17, 29, 16, 24)
+_PARITY = np.uint32(0x1BD11BDA)
+
+
+def rotl(x, r: int):
+    return (x << np.uint32(r)) | (x >> np.uint32(32 - r))
+
+
+def threefry2x32(k0, k1, x0, x1):
+    """Scalar keys k0,k1 (uint32); array counters x0,x1. 20 rounds."""
+    k2 = k0 ^ k1 ^ _PARITY
+    ks = (k0, k1, k2)
+    x0 = x0 + k0
+    x1 = x1 + k1
+    for block in range(5):
+        rots = _ROTS_A if block % 2 == 0 else _ROTS_B
+        for r in rots:
+            x0 = x0 + x1
+            x1 = rotl(x1, r)
+            x1 = x0 ^ x1
+        x0 = x0 + ks[(block + 1) % 3]
+        x1 = x1 + ks[(block + 2) % 3] + np.uint32(block + 1)
+    return x0, x1
+
+
+def keystream_tile(k0, k1, rows, blocks):
+    """rows/blocks: uint32 [R, NB] counter lattices -> uint32 [R, 2*NB] words."""
+    y0, y1 = threefry2x32(k0, k1, rows, blocks)
+    R, NB = y0.shape
+    return jnp.stack([y0, y1], axis=-1).reshape(R, 2 * NB)
+
+
+# --- Mersenne-31 ops (see core.mac) ---------------------------------------
+
+P31 = np.uint32(0x7FFFFFFF)
+_M15 = np.uint32(0x7FFF)
+_M16 = np.uint32(0xFFFF)
+
+
+def fold32(x):
+    return (x >> np.uint32(31)) + (x & P31)
+
+
+def addmod(a, b):
+    return fold32(fold32(fold32(a)) + fold32(fold32(b)))
+
+
+def mulmod(a, b):
+    a = fold32(a)
+    b = fold32(b)
+    a0, a1 = a & _M16, a >> np.uint32(16)
+    b0, b1 = b & _M16, b >> np.uint32(16)
+    hi = a1 * b1
+    mid = fold32(a1 * b0) + fold32(a0 * b1)
+    lo = a0 * b0
+    mid_f = fold32(mid)
+    mid_red = (mid_f >> np.uint32(15)) + ((mid_f & _M15) << np.uint32(16))
+    hi_red = fold32(fold32(hi) * np.uint32(2))
+    out = fold32(hi_red + mid_red)
+    return fold32(out + fold32(lo))
+
+
+def canon(x):
+    x = fold32(fold32(x))
+    return jnp.where(x == P31, jnp.uint32(0), x)

@@ -1,0 +1,25 @@
+"""Backend-dispatching wrapper for the CTR cipher kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import default_backend
+from .kernel import BLOCK_R, BLOCK_W, ctr_xor_words
+from .ref import ctr_xor_words_ref
+
+
+def ctr_xor(x: jax.Array, tkey: jax.Array, backend: str | None = None,
+            block_r: int = BLOCK_R, block_w: int = BLOCK_W) -> jax.Array:
+    """Seal/unseal a uint32 word lattice [R, W] (pads to tile multiples)."""
+    backend = backend or default_backend()
+    if backend == "jnp":
+        return ctr_xor_words_ref(x, tkey)
+    R, W = x.shape
+    br = min(block_r, R) if R % block_r else block_r
+    pr = (-R) % br
+    pw = (-W) % block_w
+    xp = jnp.pad(x, ((0, pr), (0, pw))) if (pr or pw) else x
+    out = ctr_xor_words(xp, tkey, block_r=br, block_w=block_w,
+                        interpret=(backend == "interpret"))
+    return out[:R, :W] if (pr or pw) else out

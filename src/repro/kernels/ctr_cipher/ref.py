@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the CTR cipher kernel (bit-exact)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import common
+
+
+def ctr_xor_words_ref(x: jax.Array, tkey: jax.Array) -> jax.Array:
+    """x: uint32[R, W]; keystream word (r, w) = threefry(tkey, r, w//2)[w%2]."""
+    R, W = x.shape
+    nb = (W + 1) // 2
+    rows = jax.lax.broadcasted_iota(jnp.uint32, (R, nb), 0)
+    blocks = jax.lax.broadcasted_iota(jnp.uint32, (R, nb), 1)
+    ks = common.keystream_tile(tkey[0], tkey[1], rows, blocks)[:, :W]
+    return x ^ ks

@@ -1,0 +1,162 @@
+"""Pallas TPU kernel: flash-decode attention over a SEALED KV cache.
+
+One new token (GQA query [B, K, G, hd]) attends to a ciphertext-at-rest cache
+k_ct/v_ct uint16[B, T, K, hd].  Per T-block:
+
+  * the ciphertext tile is DMA'd HBM->VMEM (same bytes a plain decode moves),
+  * keystream is regenerated in-register from the cache's (row, word) counter
+    lattice (row = (b*T + t)*K + k, matching core.cipher.seal_bits) and XOR'd,
+  * optional per-row MAC verification against the tag sidecar
+    (chunk = one row's hd words — "verify every fetched piece"),
+  * online-softmax (running max / normalizer / f32 accumulator in VMEM
+    scratch) — the classic flash-decoding recurrence.
+
+This closes the paper's within-step exposure window for serving: plaintext KV
+exists only tile-by-tile in VMEM, never in HBM, at zero extra HBM traffic —
+the jnp path, by contrast, materializes a decrypted copy of the whole cache.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .. import common
+
+BT = 512
+_NEG = -1e30
+
+
+def _unseal_rows_bf16(ct16, rows, k0, k1):
+    """ct16 uint16[R, hd]; rows uint32[R] full-tensor row ids -> bf16[R, hd]."""
+    R, hd = ct16.shape
+    nwords = hd // 2
+    nblocks = nwords // 2
+    rl = jnp.broadcast_to(rows[:, None], (R, nblocks))
+    bl = jax.lax.broadcasted_iota(jnp.uint32, (R, nblocks), 1)
+    ks = common.keystream_tile(k0, k1, rl, bl)               # [R, nwords]
+    ct32 = jax.lax.bitcast_convert_type(ct16.reshape(R, nwords, 2), jnp.uint32)
+    pt = jax.lax.bitcast_convert_type(ct32 ^ ks, jnp.uint16)
+    return jax.lax.bitcast_convert_type(pt, jnp.bfloat16).reshape(R, hd)
+
+
+def _row_tags(ct16, rows, mkeys):
+    R, hd = ct16.shape
+    nwords = hd // 2
+    w = jax.lax.bitcast_convert_type(ct16.reshape(R, nwords, 2), jnp.uint32)
+    wv = common.fold32(common.fold32(w) + jnp.uint32(1))
+    v = common.mulmod(wv, mkeys)
+    n = nwords
+    while n > 1:
+        half = n // 2
+        v = common.addmod(v[:, :half], v[:, half:n])
+        n = half
+    pos = common.canon(rows * jnp.uint32(0x9E3779B1))
+    return common.canon(common.addmod(v[:, 0],
+                                      common.mulmod(pos + jnp.uint32(1),
+                                                    mkeys[0, 0])))
+
+
+def _kernel(keyk_ref, keyv_ref, mkeys_ref, tv_ref, q_ref, kct_ref, vct_ref,
+            ktag_ref, vtag_ref, o_ref, bad_ref, m_ref, l_ref, acc_ref, *,
+            bt, T, K, G, hd, nt, verify):
+    b = pl.program_id(0)
+    kk = pl.program_id(1)
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        bad_ref[...] = jnp.zeros_like(bad_ref)
+
+    rows = ((jnp.uint32(b) * jnp.uint32(T)
+             + jnp.uint32(t * bt)
+             + jax.lax.broadcasted_iota(jnp.uint32, (bt, 1), 0)[:, 0])
+            * jnp.uint32(K) + jnp.uint32(kk))
+    kd = _unseal_rows_bf16(kct_ref[0, :, 0, :], rows, keyk_ref[0, 0],
+                           keyk_ref[0, 1])
+    vd = _unseal_rows_bf16(vct_ref[0, :, 0, :], rows, keyv_ref[0, 0],
+                           keyv_ref[0, 1])
+    t_valid = tv_ref[0, 0]
+    tpos = t * bt + jax.lax.broadcasted_iota(jnp.int32, (bt, 1), 0)[:, 0]
+    valid = tpos < t_valid
+    kd = jnp.where(valid[:, None], kd, jnp.zeros_like(kd))
+    vd = jnp.where(valid[:, None], vd, jnp.zeros_like(vd))
+
+    if verify:
+        tk = _row_tags(kct_ref[0, :, 0, :], rows, mkeys_ref[...])
+        tv_ = _row_tags(vct_ref[0, :, 0, :], rows, mkeys_ref[...])
+        badk = jnp.sum(((tk != ktag_ref[0, :, 0, 0]) & valid).astype(jnp.int32))
+        badv = jnp.sum(((tv_ != vtag_ref[0, :, 0, 0]) & valid).astype(jnp.int32))
+        bad_ref[0, 0] += badk + badv
+
+    q = q_ref[0, 0, :, :].astype(jnp.float32)                 # [G, hd]
+    s = jax.lax.dot_general(q, kd.astype(jnp.float32),
+                            (((1,), (1,)), ((), ())))          # [G, bt]
+    s = s * (hd ** -0.5)
+    s = jnp.where(valid[None, :], s, _NEG)
+
+    m_prev = m_ref[...]                                        # [G, 1]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                                     # [G, bt]
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = (acc_ref[...] * alpha
+                    + jax.lax.dot_general(p, vd.astype(jnp.float32),
+                                          (((1,), (0,)), ((), ()))))
+    m_ref[...] = m_new
+
+    @pl.when(t == nt - 1)
+    def _fin():
+        o_ref[0, 0, :, :] = (acc_ref[...]
+                             / jnp.maximum(l_ref[...], 1e-30)).astype(jnp.bfloat16)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "verify", "interpret"))
+def sealed_decode_attention(q, k_ct, v_ct, k_tags, v_tags, key_k, key_v,
+                            mkeys, t_valid, *, bt: int = BT,
+                            verify: bool = True, interpret: bool = False):
+    """q: bf16[B, K, G, hd]; k_ct/v_ct: uint16[B, T, K, hd];
+    k_tags/v_tags: uint32[B, T, K, 1]; key_k/key_v: uint32[2] tensor keys;
+    mkeys: uint32[hd//2]; t_valid: int32 scalar.
+    Returns (out bf16[B, K, G, hd], bad int32[B, K])."""
+    B, K, G, hd = q.shape
+    T = k_ct.shape[1]
+    assert T % bt == 0
+    nt = T // bt
+    grid = (B, K, nt)
+    kern = functools.partial(_kernel, bt=bt, T=T, K=K, G=G, hd=hd, nt=nt,
+                             verify=verify)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda b, k, t: (0, 0)),
+            pl.BlockSpec((1, 2), lambda b, k, t: (0, 0)),
+            pl.BlockSpec((1, hd // 2), lambda b, k, t: (0, 0)),
+            pl.BlockSpec((1, 1), lambda b, k, t: (0, 0)),
+            pl.BlockSpec((1, 1, G, hd), lambda b, k, t: (b, k, 0, 0)),
+            pl.BlockSpec((1, bt, 1, hd), lambda b, k, t: (b, t, k, 0)),
+            pl.BlockSpec((1, bt, 1, hd), lambda b, k, t: (b, t, k, 0)),
+            pl.BlockSpec((1, bt, 1, 1), lambda b, k, t: (b, t, k, 0)),
+            pl.BlockSpec((1, bt, 1, 1), lambda b, k, t: (b, t, k, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, k, t: (b, k, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, k, t: (b, k)),
+        ],
+        out_shape=(jax.ShapeDtypeStruct((B, K, G, hd), jnp.bfloat16),
+                   jax.ShapeDtypeStruct((B, K), jnp.int32)),
+        scratch_shapes=[pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, hd), jnp.float32)],
+        interpret=interpret,
+    )(key_k.reshape(1, 2), key_v.reshape(1, 2), mkeys.reshape(1, -1),
+      jnp.asarray(t_valid, jnp.int32).reshape(1, 1), q, k_ct, v_ct,
+      k_tags, v_tags)

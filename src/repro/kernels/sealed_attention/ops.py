@@ -1,0 +1,49 @@
+"""Backend-dispatching wrapper for sealed decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core import cipher, mac
+from .. import default_backend
+from .kernel import BT, sealed_decode_attention
+from .ref import sealed_decode_attention_ref
+
+
+def _mac_key(master, nonce, domain=0xA11CE):
+    y0, y1 = cipher.threefry2x32(master, jnp.asarray(nonce, jnp.uint32),
+                                 jnp.asarray(domain, jnp.uint32))
+    return jnp.stack([y0, y1])
+
+
+def seal_cache(k, v, master_key, nonce_k, nonce_v, mac_nonce=None):
+    """Seal a [B, T, K, hd] bf16 KV pair -> (k_ct, v_ct, k_tags, v_tags)."""
+    mac_nonce = nonce_k if mac_nonce is None else mac_nonce
+    hd = k.shape[-1]
+    k_ct = cipher.seal_bits(k, master_key, nonce_k)
+    v_ct = cipher.seal_bits(v, master_key, nonce_v)
+    mk = _mac_key(master_key, mac_nonce)
+    k_tags = mac.block_tags(k_ct, mk, hd // 2)   # [B, T, K, 1]
+    v_tags = mac.block_tags(v_ct, mk, hd // 2)
+    return k_ct, v_ct, k_tags, v_tags
+
+
+def decode_attention(q, k_ct, v_ct, k_tags, v_tags, master_key, nonce_k,
+                     nonce_v, t_valid, *, mac_nonce=None, bt: int = BT,
+                     verify: bool = True, backend: str | None = None):
+    """Flash-decode over a sealed cache. tags shaped [B, T, K, 1]."""
+    backend = backend or default_backend()
+    mac_nonce = nonce_k if mac_nonce is None else mac_nonce
+    mk = _mac_key(master_key, mac_nonce)
+    if backend == "jnp":
+        return sealed_decode_attention_ref(q, k_ct, v_ct, k_tags, v_tags,
+                                           master_key, nonce_k, nonce_v, mk,
+                                           t_valid, verify)
+    hd = q.shape[-1]
+    key_k = cipher.derive_tensor_key(master_key, jnp.asarray(nonce_k, jnp.uint32))
+    key_v = cipher.derive_tensor_key(master_key, jnp.asarray(nonce_v, jnp.uint32))
+    mkeys = mac.mac_keys(mk, hd // 2)
+    return sealed_decode_attention(q, k_ct, v_ct, k_tags, v_tags, key_k,
+                                   key_v, mkeys, t_valid, bt=bt,
+                                   verify=verify,
+                                   interpret=(backend == "interpret"))

@@ -1,0 +1,34 @@
+"""Oracle for sealed decode attention: unseal-whole-cache + masked softmax."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core import cipher, mac
+
+
+def sealed_decode_attention_ref(q, k_ct, v_ct, k_tags, v_tags, master_key,
+                                nonce_k, nonce_v, mac_key, t_valid,
+                                verify: bool = True):
+    """q: bf16[B, K, G, hd]; caches uint16[B, T, K, hd]. Returns (out, bad)."""
+    B, K, G, hd = q.shape
+    T = k_ct.shape[1]
+    kd = cipher.unseal_bits(k_ct, master_key, nonce_k, jnp.bfloat16)
+    vd = cipher.unseal_bits(v_ct, master_key, nonce_v, jnp.bfloat16)
+    valid = jnp.arange(T) < t_valid
+    kd = jnp.where(valid[None, :, None, None], kd, jnp.zeros_like(kd))
+    vd = jnp.where(valid[None, :, None, None], vd, jnp.zeros_like(vd))
+    s = jnp.einsum("bkgd,btkd->bkgt", q.astype(jnp.float32),
+                   kd.astype(jnp.float32)) * (hd ** -0.5)
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, vd.astype(jnp.float32))
+    bad = jnp.zeros((B, K), jnp.int32)
+    if verify:
+        cw = hd // 2
+        okk = mac.verify_block_tags(k_ct, mac_key, cw, k_tags)
+        okv = mac.verify_block_tags(v_ct, mac_key, cw, v_tags)
+        msk = valid[None, :, None, None]
+        bad = (jnp.sum((~okk) & msk, axis=(1, 3))
+               + jnp.sum((~okv) & msk, axis=(1, 3))).astype(jnp.int32)
+    return out.astype(jnp.bfloat16), bad

@@ -1,0 +1,158 @@
+"""Pallas TPU kernel: fused decrypt -> MXU matmul -> verify over sealed tiles.
+
+C = unseal(A_ct) @ unseal(B_ct), with A, B bf16 tensors stored in untrusted
+HBM as same-shape uint16 ciphertext (counter mode).  This is the TPU-native
+expression of the paper's "decrypt on demand at the SRAM boundary":
+
+  * each (bm x bk) / (bk x bn) ciphertext tile is DMA'd HBM->VMEM exactly as
+    a plain matmul would move it — sealing adds ZERO extra HBM traffic;
+  * the keystream is regenerated in-register from the (row, word) counter
+    lattice (Threefry ARX on the VPU) and XOR'd before the MXU dot;
+  * each fetched tile's chunk MAC (Mersenne-31 multilinear, chunk = one tile
+    row-segment, i.e. the paper's piece size s = bk words) is recomputed and
+    compared against the tag sidecar — "verify every fetched piece";
+  * the f32 accumulator lives in a VMEM scratch across the K grid dimension;
+    mismatch counts accumulate into an i32 output (nonzero => poisoned launch).
+
+Chunk/tag layout: tags_a uint32[M, K/bk] (chunk c of row r covers A words
+[r, c*bk/2 : (c+1)*bk/2]), tags_b uint32[K, N/bn] likewise.  Tag position
+mixing matches core.mac.block_tags with n_chunks = K/bk (resp. N/bn).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .. import common
+
+BM, BK, BN = 256, 256, 256
+
+
+def _unseal_tile_bf16(ct16, k0, k1, row0, word0):
+    """ct16: uint16[R, C] tile (C even). Counters: rows row0+i, words word0+j.
+
+    Returns bf16[R, C].  Word lattice: element (r, c) lives in 32-bit word
+    (word0*? ...) — here `word0` is the word offset of the tile's first
+    column: word(c) = word0 + c // 2; block(c) = word(c) // 2.
+    """
+    R, C = ct16.shape
+    nb = C // 4 if C % 4 == 0 else (C // 2 + 1) // 2
+    # generate the covering 32-bit blocks: columns c in [0, C) map to words
+    # w = word0 + c//2, blocks b = w//2.  Tiles are aligned (word0 % 2 == 0).
+    nwords = C // 2
+    nblocks = nwords // 2
+    rows = row0 + jax.lax.broadcasted_iota(jnp.uint32, (R, nblocks), 0)
+    blocks = (word0 // jnp.uint32(2)
+              + jax.lax.broadcasted_iota(jnp.uint32, (R, nblocks), 1))
+    ks32 = common.keystream_tile(k0, k1, rows, blocks)      # [R, nwords]
+    ct32 = jax.lax.bitcast_convert_type(
+        ct16.reshape(R, nwords, 2), jnp.uint32)             # [R, nwords]
+    pt32 = ct32 ^ ks32
+    pt16 = jax.lax.bitcast_convert_type(pt32, jnp.uint16)   # [R, nwords, 2]
+    return jax.lax.bitcast_convert_type(pt16, jnp.bfloat16).reshape(R, C)
+
+
+def _tile_tags(ct16, keys, row0, chunk_idx, n_chunks_total):
+    """Recompute the chunk tag of a fetched tile (chunk = tile row-segment)."""
+    R, C = ct16.shape
+    nwords = C // 2
+    w = jax.lax.bitcast_convert_type(ct16.reshape(R, nwords, 2), jnp.uint32)
+    wv = common.fold32(common.fold32(w) + jnp.uint32(1))
+    v = common.mulmod(wv, keys)                             # [R, nwords]
+    n = nwords
+    while n > 1:
+        half = n // 2
+        v = common.addmod(v[:, :half], v[:, half:n])
+        n = half
+    tag = v[:, 0]
+    rows = row0 + jax.lax.broadcasted_iota(jnp.uint32, (R, 1), 0)[:, 0]
+    pos = common.canon((rows * jnp.uint32(n_chunks_total) + chunk_idx)
+                       * jnp.uint32(0x9E3779B1))
+    return common.canon(common.addmod(tag, common.mulmod(pos + jnp.uint32(1),
+                                                         keys[0, 0])))
+
+
+def _sealed_matmul_kernel(keya_ref, keyb_ref, mkeys_ref, a_ref, b_ref,
+                          tag_a_ref, tag_b_ref, o_ref, bad_ref, acc_ref, *,
+                          bm, bk, bn, nk, n_chunks_a, n_chunks_b, verify):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    a = _unseal_tile_bf16(a_ref[...], keya_ref[0, 0], keya_ref[0, 1],
+                          jnp.uint32(i * bm), jnp.uint32(k * (bk // 2)))
+    b = _unseal_tile_bf16(b_ref[...], keyb_ref[0, 0], keyb_ref[0, 1],
+                          jnp.uint32(k * bk), jnp.uint32(j * (bn // 2)))
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        bad_ref[...] = jnp.zeros_like(bad_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    if verify:
+        mk = mkeys_ref[...]                                  # [1, bk//2]
+        ta = _tile_tags(a_ref[...], mk, jnp.uint32(i * bm), jnp.uint32(k),
+                        n_chunks_a)
+        tb = _tile_tags(b_ref[...], mk, jnp.uint32(k * bk), jnp.uint32(j),
+                        n_chunks_b)
+        bad = (jnp.sum((ta != tag_a_ref[:, 0]).astype(jnp.int32))
+               + jnp.sum((tb != tag_b_ref[:, 0]).astype(jnp.int32)))
+        bad_ref[0, 0] += bad
+
+    @pl.when(k == nk - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(jnp.bfloat16)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "verify",
+                                             "interpret"))
+def sealed_matmul(a_ct: jax.Array, b_ct: jax.Array, tags_a: jax.Array,
+                  tags_b: jax.Array, key_a: jax.Array, key_b: jax.Array,
+                  mac_keys_arr: jax.Array, *, bm: int = BM, bk: int = BK,
+                  bn: int = BN, verify: bool = True, interpret: bool = False):
+    """a_ct: uint16[M, K]; b_ct: uint16[K, N]; tags_*: uint32 chunk tags.
+
+    key_a/key_b: uint32[2] per-tensor keys (derive_tensor_key(master, nonce)).
+    mac_keys_arr: uint32[bk//2] canonical M31 keys (mac.mac_keys of the
+    nonce-bound MAC key).  Returns (C bf16[M, N], bad int32[gm, gn]).
+    """
+    M, K = a_ct.shape
+    K2, N = b_ct.shape
+    assert K == K2 and M % bm == 0 and K % bk == 0 and N % bn == 0
+    nk = K // bk
+    grid = (M // bm, N // bn, nk)
+    out_shape = (jax.ShapeDtypeStruct((M, N), jnp.bfloat16),
+                 jax.ShapeDtypeStruct((M // bm, N // bn), jnp.int32))
+    kern = functools.partial(
+        _sealed_matmul_kernel, bm=bm, bk=bk, bn=bn, nk=nk,
+        n_chunks_a=K // bk, n_chunks_b=N // bn, verify=verify)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((1, 2), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((1, bk // 2), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, 1), lambda i, j, k: (k, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (i, j)),
+        ],
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(key_a.reshape(1, 2), key_b.reshape(1, 2),
+      mac_keys_arr.reshape(1, -1), a_ct, b_ct, tags_a, tags_b)

@@ -1,0 +1,67 @@
+"""Backend-dispatching wrapper for the fused sealed matmul.
+
+Key plumbing mirrors core.sealed: per-tensor cipher keys are
+derive_tensor_key(master, nonce); MAC keys come from mac.mac_keys of the
+nonce-bound MAC key.  The kernel path requires the MAC chunking of both
+operands to be tile-aligned (chunk = bk/2 words for A, bn/2 for B) — the
+wrapper asserts this and derives tags itself if not supplied.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core import cipher, mac
+from .. import default_backend
+from .kernel import BM, BK, BN, sealed_matmul
+from .ref import sealed_matmul_ref
+
+
+def _mac_key(master, nonce, domain):
+    y0, y1 = cipher.threefry2x32(master, jnp.asarray(nonce, jnp.uint32),
+                                 jnp.asarray(domain, jnp.uint32))
+    return jnp.stack([y0, y1])
+
+
+def seal_operand(x: jax.Array, master_key, nonce, chunk_words: int,
+                 mac_nonce=None, domain: int = 0xA11CE):
+    """Seal a bf16 matrix for the kernel: (ct uint16, tags uint32).
+
+    mac_nonce: the launch's MAC-key nonce (both operands of one sealed matmul
+    share it; defaults to ``nonce``).
+    """
+    mac_nonce = nonce if mac_nonce is None else mac_nonce
+    ct = cipher.seal_bits(x, master_key, nonce)
+    tags = mac.block_tags(
+        ct, _mac_key(master_key, jnp.asarray(mac_nonce, jnp.uint32), domain),
+        chunk_words, domain)
+    return ct, tags
+
+
+def matmul(a_ct, b_ct, tags_a, tags_b, master_key, nonce_a, nonce_b,
+           *, bm: int = BM, bk: int = BK, bn: int = BN, verify: bool = True,
+           domain: int = 0xA11CE, backend: str | None = None):
+    """C = unseal(a_ct) @ unseal(b_ct) with per-tile MAC verification.
+
+    Both operands must use nonce-matched MAC keys; we follow core.sealed's
+    convention that the MAC key is bound to nonce_a (callers sealing A and B
+    under one logical launch use one nonce pair (n, n+1) and the MAC key of n).
+    """
+    backend = backend or default_backend()
+    M, K = a_ct.shape
+    _, N = b_ct.shape
+    cw = bk // 2
+    if backend == "jnp":
+        return sealed_matmul_ref(a_ct, b_ct, tags_a, tags_b, master_key,
+                                 nonce_a, nonce_b,
+                                 _mac_key(master_key, nonce_a, domain),
+                                 cw, domain)
+    assert K % bk == 0 and M % bm == 0 and N % bn == 0
+    assert bn // 2 == cw, "kernel shares one MAC key vector: need bn == bk"
+    key_a = cipher.derive_tensor_key(master_key, jnp.asarray(nonce_a, jnp.uint32))
+    key_b = cipher.derive_tensor_key(master_key, jnp.asarray(nonce_b, jnp.uint32))
+    mkeys = mac.mac_keys(_mac_key(master_key, nonce_a, domain), cw, domain)
+    c, bad = sealed_matmul(a_ct, b_ct, tags_a, tags_b, key_a, key_b, mkeys,
+                           bm=bm, bk=bk, bn=bn, verify=verify,
+                           interpret=(backend == "interpret"))
+    return c, bad.sum()

@@ -1,0 +1,22 @@
+"""Oracle for the fused sealed matmul: unseal (core.cipher) -> matmul ->
+verify (core.mac).  Computes the same values through the composable jnp path
+(which is also what the dry-run lowers)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core import cipher, mac
+
+
+def sealed_matmul_ref(a_ct, b_ct, tags_a, tags_b, master_key, nonce_a, nonce_b,
+                      mac_key, chunk_words: int, domain: int = 0xA11CE):
+    """Returns (C bf16[M, N], n_bad int32 scalar)."""
+    a = cipher.unseal_bits(a_ct, master_key, nonce_a, jnp.bfloat16)
+    b = cipher.unseal_bits(b_ct, master_key, nonce_b, jnp.bfloat16)
+    c = jnp.dot(a, b, preferred_element_type=jnp.float32).astype(jnp.bfloat16)
+    bad_a = jnp.sum(~mac.verify_block_tags(a_ct, mac_key, chunk_words, tags_a,
+                                           domain))
+    bad_b = jnp.sum(~mac.verify_block_tags(b_ct, mac_key, chunk_words, tags_b,
+                                           domain))
+    return c, (bad_a + bad_b).astype(jnp.int32)

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: chunked multilinear (Mersenne-31) MAC with tree reduce.
+
+Computes the per-chunk tags of core.mac.block_tags for a word lattice
+uint32[R, W] chunked along the last axis into W/CW chunks:
+
+    tag[r, c] = canon( tree_sum_j mulmod(fold(w[r, c*CW+j]) + 1, key[j])
+                       + mulmod(pos(r,c) + 1, key[0]) )
+
+The per-word multiply vectorizes across lanes; the chunk reduction is an
+O(log CW) in-register tree — the paper's §4.3 parallel-authentication
+proposal, implemented natively (contrast: the paper's serial GFM costs
+8 cycles per 128-bit block and is why FC layers slow down 5.4x).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .. import common
+
+BLOCK_R = 256
+
+
+def _mac_kernel(keys_ref, x_ref, o_ref, *, block_r: int, cw: int,
+                n_chunks_total: int):
+    pi = pl.program_id(0)
+    pj = pl.program_id(1)
+    w = x_ref[...]                                     # [block_r, cw]
+    keys = keys_ref[...]                               # [1, cw]
+    wv = common.fold32(common.fold32(w) + jnp.uint32(1))
+    v = common.mulmod(wv, keys)                        # [block_r, cw]
+    n = cw
+    while n > 1:                                       # O(log cw) tree
+        half = n // 2
+        v = common.addmod(v[:, :half], v[:, half:n])
+        n = half
+    tag = v[:, 0]
+    rows = (jnp.uint32(pi * block_r)
+            + jax.lax.broadcasted_iota(jnp.uint32, (block_r, 1), 0)[:, 0])
+    pos = common.canon((rows * jnp.uint32(n_chunks_total) + jnp.uint32(pj))
+                       * jnp.uint32(0x9E3779B1))
+    k0 = keys_ref[0, 0]
+    tag = common.canon(common.addmod(tag, common.mulmod(pos + jnp.uint32(1), k0)))
+    o_ref[...] = tag[:, None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk_words", "block_r", "interpret"))
+def mac_tags_words(x: jax.Array, keys: jax.Array, *, chunk_words: int,
+                   block_r: int = BLOCK_R, interpret: bool = False):
+    """x: uint32[R, W] (W % chunk_words == 0, chunk_words a power of two);
+    keys: uint32[chunk_words] canonical M31 keys. Returns uint32[R, W/cw]."""
+    R, W = x.shape
+    cw = chunk_words
+    assert W % cw == 0 and (cw & (cw - 1)) == 0, (W, cw)
+    assert R % block_r == 0, (R, block_r)
+    n_chunks = W // cw
+    grid = (R // block_r, n_chunks)
+    return pl.pallas_call(
+        functools.partial(_mac_kernel, block_r=block_r, cw=cw,
+                          n_chunks_total=n_chunks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, cw), lambda i, j: (0, 0)),
+            pl.BlockSpec((block_r, cw), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_r, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, n_chunks), jnp.uint32),
+        interpret=interpret,
+    )(keys.reshape(1, cw), x)

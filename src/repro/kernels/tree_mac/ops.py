@@ -1,0 +1,36 @@
+"""Backend-dispatching wrapper for the tree MAC kernel."""
+from __future__ import annotations
+
+import jax
+
+from ...core import mac
+from .. import default_backend
+from .kernel import BLOCK_R, mac_tags_words
+from .ref import mac_tags_words_ref
+
+
+def mac_tags(x: jax.Array, key: jax.Array, chunk_words: int,
+             domain: int = 0xA11CE, backend: str | None = None,
+             block_r: int = BLOCK_R) -> jax.Array:
+    """Per-chunk tags for uint32[R, W]; key is the (uint32[2]) session subkey."""
+    backend = backend or default_backend()
+    if backend == "jnp":
+        return mac_tags_words_ref(x, key, chunk_words, domain)
+    R, W = x.shape
+    # block_tags may shrink the chunk to a divisor of W; mirror that here
+    n_chunks = (W + chunk_words - 1) // chunk_words
+    while W % n_chunks:
+        n_chunks += 1
+    cw = W // n_chunks
+    assert (cw & (cw - 1)) == 0, f"kernel path needs power-of-two chunks, got {cw}"
+    keys = mac.mac_keys(key, cw, domain)
+    br = min(block_r, R) if R % block_r else block_r
+    assert R % br == 0
+    return mac_tags_words(x, keys, chunk_words=cw, block_r=br,
+                          interpret=(backend == "interpret"))
+
+
+def verify_tags(x: jax.Array, key: jax.Array, chunk_words: int,
+                tags: jax.Array, domain: int = 0xA11CE,
+                backend: str | None = None) -> jax.Array:
+    return mac_tags(x, key, chunk_words, domain, backend) == tags

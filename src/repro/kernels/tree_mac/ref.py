@@ -1,0 +1,12 @@
+"""Oracle for the tree MAC kernel: core.mac.block_tags on the word lattice."""
+from __future__ import annotations
+
+import jax
+
+from ...core import mac
+
+
+def mac_tags_words_ref(x: jax.Array, key: jax.Array, chunk_words: int,
+                       domain: int = 0xA11CE) -> jax.Array:
+    """x: uint32[R, W] -> uint32[R, W/chunk_words] canonical tags."""
+    return mac.block_tags(x, key, chunk_words, domain)

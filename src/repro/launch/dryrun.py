@@ -1,0 +1,339 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Everything below is ordinary code.
+
+DOC = """Multi-pod dry-run — deliverable (e).
+
+For every (architecture x input-shape) cell, lower + compile the real step
+function (train_step / serve_prefill / serve_step) against ShapeDtypeStruct
+inputs on the production meshes:
+
+    16x16         ("data", "model")          one 256-chip v5e pod
+    2x16x16       ("pod", "data", "model")   two pods, 512 chips
+
+and record memory_analysis() (fits-in-HBM proof), cost_analysis() (FLOPs /
+bytes for the roofline), and the collective schedule parsed from the
+optimized HLO.  Output: JSONL rows consumed by benchmarks/roofline.py and
+EXPERIMENTS.md.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh both --security trusted \
+        --out results/dryrun.jsonl
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from .. import configs
+from ..models.config import SHAPES_BY_NAME
+from ..parallel import sharding as shd
+from . import steps
+from .mesh import make_production_mesh
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:{[^}]*})?))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s16|u16|s8|u8|pred|s64|u64)"
+                       r"\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        n = 1.0
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%?[\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|condition)=(%?[\w\.\-]+)")
+_WHILE_RE = re.compile(r"while\(.*?body=(%?[\w\.\-]+).*?$|"
+                       r"while\(", re.M)
+_TRIP_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> dict:
+    """computation name -> body text."""
+    comps = {}
+    cur, buf, entry = None, [], None
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line)
+        if m:
+            cur = m.group(1)
+            if line.startswith("ENTRY"):
+                entry = cur
+            buf = []
+            comps[cur] = buf
+        elif cur is not None:
+            buf.append(line)
+    return {k: "\n".join(v) for k, v in comps.items()}, entry
+
+
+def _trip_count(cond_body: str) -> int:
+    """Heuristic: scan conditions compare the induction var to a constant."""
+    cands = [int(x) for x in _TRIP_RE.findall(cond_body)
+             if 1 < int(x) <= 10_000_000]
+    return max(cands) if cands else 1
+
+
+def hlo_collectives(hlo_text: str) -> dict:
+    """Per-device collective bytes, corrected for while-loop trip counts.
+
+    XLA's aggregate cost_analysis counts loop bodies ONCE (verified with a
+    controlled scan-of-matmuls test); we rebuild the computation call graph,
+    extract scan trip counts from loop conditions, and multiply.
+    """
+    comps, entry = _split_computations(hlo_text)
+    if entry is None:
+        entry = next(iter(comps)) if comps else None
+
+    # direct collective bytes per computation
+    direct = {}
+    for name, body in comps.items():
+        recs = {}
+        for m in _COLL_RE.finditer(body):
+            type_str, op = m.group(1), m.group(2)
+            rec = recs.setdefault(op, {"count": 0, "bytes": 0.0})
+            rec["count"] += 1
+            rec["bytes"] += _shape_bytes(type_str)
+        direct[name] = recs
+
+    # call edges with multiplicity (while bodies get their trip count)
+    edges = {name: [] for name in comps}
+    for name, body in comps.items():
+        for line in body.splitlines():
+            if " while(" in line:
+                mb = re.search(r"body=(%?[\w\.\-]+)", line)
+                mc = re.search(r"condition=(%?[\w\.\-]+)", line)
+                trips = _trip_count(comps.get(mc.group(1), "")) if mc else 1
+                if mb and mb.group(1) in comps:
+                    edges[name].append((mb.group(1), trips))
+                if mc and mc.group(1) in comps:
+                    edges[name].append((mc.group(1), trips))
+            else:
+                for m in _CALL_RE.finditer(line):
+                    callee = m.group(1)
+                    if callee in comps:
+                        edges[name].append((callee, 1))
+
+    # accumulate with multiplicities (memoized DFS; HLO call graphs are DAGs)
+    memo = {}
+
+    def total(name):
+        if name in memo:
+            return memo[name]
+        agg = {op: dict(rec) for op, rec in direct[name].items()}
+        for callee, mult in edges[name]:
+            sub = total(callee)
+            for op, rec in sub.items():
+                dst = agg.setdefault(op, {"count": 0, "bytes": 0.0})
+                dst["count"] += rec["count"] * mult
+                dst["bytes"] += rec["bytes"] * mult
+        memo[name] = agg
+        return agg
+
+    return total(entry) if entry else {}
+
+
+def collective_link_bytes(colls: dict) -> float:
+    """Approx bytes crossing a device's links (ring algorithms)."""
+    total = 0.0
+    for op, rec in colls.items():
+        factor = 2.0 if op == "all-reduce" else 1.0
+        total += factor * rec["bytes"]
+    return total
+
+
+def _tree_device_bytes(tree, shardings, mesh) -> float:
+    """Analytic per-device bytes of a sharded abstract tree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    shs = jax.tree_util.tree_leaves(shardings)
+    total = 0
+    for leaf, sh in zip(leaves, shs):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        try:
+            shard_n = int(np.prod(sh.shard_shape(leaf.shape))) if leaf.shape else 1
+        except Exception:
+            shard_n = n
+        total += shard_n * jax.numpy.dtype(leaf.dtype).itemsize
+    return float(total)
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+             security: str, overrides: dict | None = None,
+             microbatch: int = 0) -> dict:
+    t0 = time.time()
+    cell = steps.make_cell(arch, shape_name, security=security,
+                           overrides=overrides)
+    shape = cell.shape
+    row = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "security": security, "kind": shape.kind}
+    skip = configs.skip_reason(arch, shape_name)
+    if skip:
+        row.update(status="skip", reason=skip)
+        return row
+
+    ctx = shd.make_ctx(mesh)
+    with shd.use(ctx):
+        if shape.kind == "train":
+            mb = microbatch or configs.train_microbatch(arch)
+            n_accum = shape.global_batch // mb
+            ast = steps.abstract_train_state(cell)
+            st_sh = steps.train_state_shardings(cell, mesh, ast)
+            bspecs = steps.stacked_batch_specs(cell, n_accum, mb)
+            b_sh = steps.batch_shardings(cell, mesh, bspecs, stacked=True)
+            fn = steps.make_train_step_fn(cell)
+            jitted = jax.jit(fn, in_shardings=(st_sh, b_sh),
+                             out_shardings=(st_sh, None))
+            lowered = jitted.lower(ast, bspecs)
+            args_bytes = (_tree_device_bytes(ast, st_sh, mesh)
+                          + _tree_device_bytes(bspecs, b_sh, mesh))
+            row["n_accum"] = n_accum
+            row["microbatch"] = mb
+        elif shape.kind == "prefill":
+            ap = steps.abstract_params(cell)
+            p_sh = steps.params_shardings(cell, mesh, ap)
+            bspecs = configs.input_specs(cell.cfg, shape)
+            b_sh = steps.batch_shardings(cell, mesh, bspecs, stacked=False)
+            fn = steps.make_prefill_fn(cell)
+            jitted = jax.jit(fn, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(ap, bspecs)
+            args_bytes = (_tree_device_bytes(ap, p_sh, mesh)
+                          + _tree_device_bytes(bspecs, b_sh, mesh))
+        else:  # decode
+            ap = steps.abstract_params(cell)
+            p_sh = steps.params_shardings(cell, mesh, ap)
+            ac = steps.abstract_decode_state(cell)
+            c_sh = steps.decode_state_shardings(cell, mesh, ac)
+            bspecs = configs.input_specs(cell.cfg, shape)
+            b_sh = steps.batch_shardings(cell, mesh, bspecs, stacked=False)
+            fn = steps.make_decode_fn(cell)
+            jitted = jax.jit(fn, in_shardings=(p_sh, c_sh, b_sh["tokens"]),
+                             out_shardings=(None, c_sh))
+            lowered = jitted.lower(ap, ac, bspecs["tokens"])
+            args_bytes = (_tree_device_bytes(ap, p_sh, mesh)
+                          + _tree_device_bytes(ac, c_sh, mesh)
+                          + _tree_device_bytes(bspecs, b_sh, mesh))
+
+        compiled = lowered.compile()
+
+    row["args_bytes_per_device"] = args_bytes
+    try:
+        ma = compiled.memory_analysis()
+        row["memory_analysis"] = {
+            k: int(getattr(ma, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(ma, k)}
+    except Exception as e:  # CPU backend may not implement it
+        row["memory_analysis"] = {"unavailable": str(e)[:120]}
+    try:
+        ca = compiled.cost_analysis()
+        row["cost_analysis"] = {k: float(ca[k]) for k in
+                                ("flops", "bytes accessed")
+                                if k in ca}
+        for k, v in ca.items():
+            if k.startswith("bytes accessed") and k != "bytes accessed":
+                continue
+        row["flops"] = float(ca.get("flops", 0.0))
+        row["bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
+    except Exception as e:
+        row["cost_analysis"] = {"unavailable": str(e)[:120]}
+    try:
+        hlo = compiled.as_text()
+        colls = hlo_collectives(hlo)
+        row["collectives"] = colls
+        row["collective_link_bytes"] = collective_link_bytes(colls)
+        row["hlo_bytes"] = len(hlo)
+    except Exception as e:
+        row["collectives"] = {"unavailable": str(e)[:120]}
+    row["status"] = "ok"
+    row["compile_s"] = round(time.time() - t0, 1)
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=("pod", "multipod", "both"))
+    ap.add_argument("--security", default="trusted",
+                    choices=("trusted", "ctr", "off"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells already ok/skip in --out")
+    args = ap.parse_args()
+
+    done = set()
+    if args.resume and args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                r = json.loads(line)
+                if r.get("status") in ("ok", "skip"):
+                    done.add((r["arch"], r["shape"], r["mesh"], r["security"]))
+
+    if args.all:
+        cells = [(a, s.name) for a, s, _ in configs.all_cells()]
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+
+    meshes = []
+    if args.mesh in ("pod", "both"):
+        meshes.append(("pod_16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multipod", "both"):
+        meshes.append(("multipod_2x16x16", make_production_mesh(multi_pod=True)))
+
+    out_f = open(args.out, "a") if args.out else None
+    n_ok = n_skip = n_fail = 0
+    for mesh_name, mesh in meshes:
+        for arch, shape in cells:
+            if (arch, shape, mesh_name, args.security) in done:
+                continue
+            try:
+                row = run_cell(arch, shape, mesh, mesh_name, args.security)
+            except Exception as e:
+                row = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                       "security": args.security, "status": "fail",
+                       "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+            st = row["status"]
+            n_ok += st == "ok"
+            n_skip += st == "skip"
+            n_fail += st == "fail"
+            msg = {"ok": f"flops={row.get('flops', 0):.3e} "
+                         f"coll={row.get('collective_link_bytes', 0):.3e}B "
+                         f"({row.get('compile_s', 0)}s)",
+                   "skip": row.get("reason", ""),
+                   "fail": row.get("error", "")}[st]
+            print(f"[{st:4s}] {mesh_name:18s} {arch:26s} {shape:12s} {msg}",
+                  flush=True)
+            if out_f:
+                slim = {k: v for k, v in row.items() if k != "trace"}
+                out_f.write(json.dumps(slim) + "\n")
+                out_f.flush()
+    print(f"\nDRY-RUN SUMMARY: ok={n_ok} skip={n_skip} fail={n_fail}")
+    if out_f:
+        out_f.close()
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,219 @@
+"""Step builders shared by the real drivers (train.py / serve.py) and the
+multi-pod dry-run: abstract state construction, logical->Named shardings,
+and the jit-able step callables for every (arch x shape x security) cell.
+
+Nothing here allocates device memory for the full configs — states are built
+with jax.eval_shape and lowered from ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .. import configs
+from ..core import sealed as sealed_lib
+from ..core.policy import SecurityConfig
+from ..models import registry
+from ..models.config import SHAPES_BY_NAME, ShapeConfig
+from ..optim import AdamW, TrainState
+from ..parallel import sharding as shd
+from ..train import trainer as trainer_lib
+
+
+# ---------------------------------------------------------------------------
+# logical specs for (possibly sealed) trees
+# ---------------------------------------------------------------------------
+
+def state_logical_specs(cfg, model):
+    """Plaintext-structure logical specs for a TrainState."""
+    p = model.param_specs(cfg)
+    return TrainState(step="r", params=p, mu=p, nu=p)
+
+
+def tree_shardings(logical_specs, abstract_tree, mesh):
+    """NamedShardings matching ``abstract_tree``'s exact pytree structure.
+
+    ``logical_specs`` follows the PLAINTEXT structure; where the abstract tree
+    holds a SealedTensor, the spec is expanded: ct keeps the plaintext spec
+    (shaped ciphertext => same PartitionSpec), tags drop the last axis'
+    sharding (they chunk along it), nonce is replicated.
+    """
+    ctx = shd.make_ctx(mesh)
+    from jax.sharding import NamedSharding
+
+    def ns(logical, shape):
+        return NamedSharding(mesh, shd.fit_pspec(ctx, logical, shape))
+
+    def f(spec, node):
+        if isinstance(node, sealed_lib.SealedTensor):
+            sp = spec if isinstance(spec, tuple) else ()
+            ct = ns(sp, node.ct.shape)
+            if node.tags.ndim == 0 or node.tags.shape == (0,):
+                tags = ctx.named()
+            else:
+                tags = ns(tuple(sp[:-1]) + (None,), node.tags.shape)
+            return sealed_lib.SealedTensor(ct=ct, tags=tags, nonce=ctx.named(),
+                                           dtype=node.dtype, spec=node.spec)
+        if spec == "r" or spec is None or not isinstance(spec, tuple):
+            return ctx.named()
+        return ns(spec, node.shape)
+
+    return jax.tree_util.tree_map(f, logical_specs, abstract_tree,
+                                  is_leaf=shd.is_spec_leaf)
+
+
+# ---------------------------------------------------------------------------
+# cell description
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape: ShapeConfig
+    cfg: Any
+    model: Any
+    sec: SecurityConfig
+    key: jax.Array
+    opt: Optional[AdamW] = None
+
+    @property
+    def sealed(self) -> bool:
+        return self.sec.enabled
+
+
+def make_cell(arch_id: str, shape_name: str, *, smoke: bool = False,
+              security: str = "trusted", overrides: dict | None = None) -> Cell:
+    cfg = configs.get_config(arch_id, smoke=smoke)
+    if not smoke:
+        cfg = cfg.with_(remat="full")
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    shape = SHAPES_BY_NAME[shape_name]
+    if security == "off":
+        sec = SecurityConfig.off()
+    elif security == "ctr":
+        sec = SecurityConfig.ctr_only()
+    else:
+        sec = SecurityConfig()
+    key = jnp.array([0x5EC0DE, 0xFACADE], dtype=jnp.uint32)
+    opt = AdamW(lr=3e-4, state_dtype=configs.opt_state_dtype(arch_id))
+    return Cell(arch_id=arch_id, shape=shape, cfg=cfg,
+                model=registry.get_model(cfg), sec=sec, key=key, opt=opt)
+
+
+# ---------------------------------------------------------------------------
+# abstract states + shardings
+# ---------------------------------------------------------------------------
+
+def abstract_train_state(cell: Cell):
+    def build():
+        params = cell.model.init(jax.random.PRNGKey(0), cell.cfg)
+        state = cell.opt.init(params)
+        return trainer_lib.seal_state(state, cell.key, cell.sec)
+    return jax.eval_shape(build)
+
+
+def abstract_params(cell: Cell):
+    def build():
+        params = cell.model.init(jax.random.PRNGKey(0), cell.cfg)
+        if cell.sealed:
+            params = sealed_lib.seal_tree(params, cell.key, cell.sec.weights,
+                                          1 << 8)
+        return params
+    return jax.eval_shape(build)
+
+
+def abstract_decode_state(cell: Cell):
+    cfg, shape = cell.cfg, cell.shape
+    src_len = shape.seq_len if cfg.family == "encdec" else 0
+    return jax.eval_shape(
+        lambda: registry.make_decode_state(cfg, shape.global_batch,
+                                           shape.seq_len, src_len,
+                                           sealed=cell.sealed))
+
+
+def train_state_shardings(cell: Cell, mesh, abstract=None):
+    specs = state_logical_specs(cell.cfg, cell.model)
+    abstract = abstract if abstract is not None else abstract_train_state(cell)
+    return tree_shardings(specs, abstract, mesh)
+
+
+def params_shardings(cell: Cell, mesh, abstract=None):
+    p = cell.model.param_specs(cell.cfg)
+    abstract = abstract if abstract is not None else abstract_params(cell)
+    return tree_shardings(p, abstract, mesh)
+
+
+def decode_state_shardings(cell: Cell, mesh, abstract=None):
+    specs = registry.decode_state_specs(cell.cfg, sealed=cell.sealed)
+    abstract = abstract if abstract is not None else abstract_decode_state(cell)
+    return tree_shardings(specs, abstract, mesh)
+
+
+def batch_shardings(cell: Cell, mesh, batch_specs: dict, stacked: bool):
+    """tokens/labels/frontends: batch over data axes; accum dim unsharded."""
+    from jax.sharding import NamedSharding
+    ctx = shd.make_ctx(mesh)
+    out = {}
+    for k, v in batch_specs.items():
+        lead = (None,) if stacked else ()
+        rest = (None,) * (len(v.shape) - len(lead) - 1)
+        out[k] = NamedSharding(
+            mesh, shd.fit_pspec(ctx, (*lead, "data", *rest), v.shape))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step_fn(cell: Cell, grad_hook=None):
+    acc = getattr(configs.arch_module(cell.arch_id), "ACC_DTYPE", "float32") \
+        if cell.arch_id in configs.ARCH_IDS else "float32"
+    return trainer_lib.make_train_step(cell.model, cell.cfg, cell.opt,
+                                       cell.sec, cell.key, grad_hook=grad_hook,
+                                       acc_dtype=acc)
+
+
+def make_prefill_fn(cell: Cell):
+    max_len = cell.shape.seq_len
+
+    def prefill(params, batch):
+        if cell.sealed:
+            params, ok = sealed_lib.unseal_tree(params, cell.key)
+            ctx = (cell.key, jnp.uint32(1))
+        else:
+            ok, ctx = jnp.bool_(True), None
+        logits, cache = cell.model.prefill(params, cell.cfg, batch, max_len,
+                                           seal_ctx=ctx)
+        return jnp.where(ok, logits, jnp.nan), cache
+
+    return prefill
+
+
+def make_decode_fn(cell: Cell):
+    def decode(params, cache, tokens):
+        if cell.sealed:
+            params, ok = sealed_lib.unseal_tree(params, cell.key)
+            ctx = (cell.key, cache.get("nonce"))
+        else:
+            ok, ctx = jnp.bool_(True), None
+        logits, cache = cell.model.decode_step(params, cell.cfg, cache, tokens,
+                                               seal_ctx=ctx)
+        return jnp.where(ok, logits, jnp.nan), cache
+
+    return decode
+
+
+def stacked_batch_specs(cell: Cell, n_accum: int, microbatch: int = 0):
+    """Train input specs with the grad-accumulation leading dim."""
+    mb = microbatch or configs.train_microbatch(cell.arch_id)
+    base = configs.input_specs(cell.cfg, cell.shape, microbatch=mb)
+    assert cell.shape.global_batch % mb == 0
+    n = n_accum or cell.shape.global_batch // mb
+    return {k: jax.ShapeDtypeStruct((n, *v.shape), v.dtype)
+            for k, v in base.items()}

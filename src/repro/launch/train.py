@@ -1,0 +1,88 @@
+"""Training launcher.
+
+Smoke-scale execution on this host:
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --steps 20
+
+On a real TPU slice the same driver runs the full config with the production
+mesh (``--mesh pod``); on CPU we run the reduced config single-device unless
+a host-device mesh is forced via XLA_FLAGS.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .. import configs
+from ..core.channel import SecureChannel
+from ..core.policy import SecurityConfig
+from ..data import SyntheticLM
+from ..parallel import sharding as shd
+from ..train import seal_state
+from ..train.fault import FailureInjector, StragglerPolicy, Supervisor
+from . import steps as steps_lib
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--security", default="trusted",
+                    choices=("trusted", "ctr", "off"))
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--accum", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--fail-at", type=int, default=-1)
+    args = ap.parse_args()
+
+    cell = steps_lib.make_cell(args.arch, "train_4k", smoke=args.smoke,
+                               security=args.security)
+    cfg, model = cell.cfg, cell.model
+    channel = (SecureChannel.establish() if args.security != "off"
+               else SecureChannel.insecure())
+    if args.security == "ctr":
+        channel.config = SecurityConfig.ctr_only()
+    cell.sec = channel.config
+    cell.key = channel.jkey
+
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    state = seal_state(cell.opt.init(params), channel.jkey, channel.config)
+    step = jax.jit(steps_lib.make_train_step_fn(cell))
+
+    extra = {}
+    if cfg.frontend == "patch":
+        extra["patch_embeds"] = (cfg.n_frontend_tokens, cfg.d_model)
+    if cfg.frontend == "frame":
+        extra["frame_embeds"] = (args.seq, cfg.d_model)
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq, batch=args.batch)
+
+    def batch_fn(i):
+        mb = data.microbatches_at(i, args.accum, extra)
+        return {k: jnp.asarray(v) for k, v in mb.items()}
+
+    def stepper(s, b):
+        t0 = time.perf_counter()
+        s, m = step(s, b)
+        jax.block_until_ready(m["loss"])
+        print(f"step loss={float(m['loss']):.4f} "
+              f"seal_ok={bool(m['seal_ok'])} "
+              f"({(time.perf_counter()-t0)*1e3:.0f} ms)")
+        return s, m
+
+    injector = FailureInjector(fail_at_steps=(args.fail_at,)) \
+        if args.fail_at >= 0 else None
+    sup = Supervisor(step_fn=stepper, batch_fn=batch_fn,
+                     ckpt_dir=args.ckpt_dir, key_bytes=channel.key_bytes,
+                     save_every=10, injector=injector,
+                     straggler=StragglerPolicy())
+    state, metrics, events = sup.run(state, args.steps, log=print)
+    print("done:", events)
+
+
+if __name__ == "__main__":
+    main()

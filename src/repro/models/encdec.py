@@ -1,0 +1,261 @@
+"""Encoder-decoder transformer — seamless-m4t family (audio frontend stubbed).
+
+Encoder: non-causal self-attention over precomputed frame embeddings
+(``input_specs`` supplies [B, T_src, D] — the modality frontend is a stub per
+the assignment).  Decoder: causal self-attention + cross-attention to the
+encoder output.  Serving caches: decoder self-KV (grows) + cross-KV
+(precomputed once from the encoder output at prefill).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core import cipher
+from ..parallel.sharding import shard
+from . import layers as L
+from . import transformer as TF
+
+
+def _enc_block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), cfg.p_dtype),
+        "attn": L.attn_params(k1, cfg),
+        "ln2": jnp.ones((cfg.d_model,), cfg.p_dtype),
+        "mlp": L.swiglu_params(k2, cfg.d_model, cfg.d_ff, cfg.p_dtype),
+    }
+
+
+def _dec_block_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), cfg.p_dtype),
+        "self_attn": L.attn_params(k1, cfg),
+        "ln_x": jnp.ones((cfg.d_model,), cfg.p_dtype),
+        "cross_attn": L.attn_params(k2, cfg),
+        "ln2": jnp.ones((cfg.d_model,), cfg.p_dtype),
+        "mlp": L.swiglu_params(k3, cfg.d_model, cfg.d_ff, cfg.p_dtype),
+    }
+
+
+def init(key, cfg):
+    ks = jax.random.split(key, 5)
+    ekeys = jax.random.split(ks[0], cfg.encdec.n_enc_layers)
+    dkeys = jax.random.split(ks[1], cfg.encdec.n_dec_layers)
+    return {
+        "embed": L.embed_init(ks[2], cfg.vocab, cfg.d_model, cfg.p_dtype),
+        "enc_layers": jax.vmap(lambda k: _enc_block_init(k, cfg))(ekeys),
+        "enc_norm": jnp.ones((cfg.d_model,), cfg.p_dtype),
+        "dec_layers": jax.vmap(lambda k: _dec_block_init(k, cfg))(dkeys),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.p_dtype),
+        "unembed": L.dense_init(ks[3], cfg.d_model, cfg.vocab, cfg.p_dtype),
+    }
+
+
+def param_specs(cfg):
+    stack = lambda t: jax.tree_util.tree_map(
+        lambda s: (None, *s), t, is_leaf=lambda s: isinstance(s, tuple))
+    fs = TF._fsdp if cfg.fsdp else (lambda t: t)
+    enc = {"ln1": (None,), "attn": fs(L.attn_specs(cfg)),
+           "ln2": (None,), "mlp": fs(L.swiglu_specs())}
+    dec = {"ln1": (None,), "self_attn": fs(L.attn_specs(cfg)),
+           "ln_x": (None,), "cross_attn": fs(L.attn_specs(cfg)),
+           "ln2": (None,), "mlp": fs(L.swiglu_specs())}
+    return {"embed": ("model", "data"), "enc_layers": stack(enc),
+            "enc_norm": (None,), "dec_layers": stack(dec),
+            "final_norm": (None,), "unembed": ("data", "model")}
+
+
+def encode(params, cfg, frames):
+    """frames: [B, T_src, D] precomputed embeddings (frontend stub)."""
+    x = frames.astype(cfg.act_dtype)
+    x = shard(x, "data", None, None)
+    positions = jnp.arange(x.shape[1])
+
+    def block(xx, lp):
+        h = L.rms_norm(xx, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.project_qkv(lp["attn"], cfg, h, positions)
+        a = L.gqa_attention(q, k, v, causal=False, q_block=cfg.q_block)
+        xx = xx + L.attn_out(lp["attn"], a, xx.shape[0], xx.shape[1])
+        h2 = L.rms_norm(xx, lp["ln2"], cfg.norm_eps)
+        return shard(xx + L.swiglu(lp["mlp"], h2), "data", None, None)
+
+    f = TF._maybe_remat(block, cfg)
+    x, _ = jax.lax.scan(lambda c, lp: (f(c, lp), None), x, params["enc_layers"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_block(lp, cfg, x, positions, enc_kv, self_kv=None, pos=None):
+    """enc_kv: (k, v) from encoder output. self_kv: cache or None (training)."""
+    B, S, _ = x.shape
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = L.project_qkv(lp["self_attn"], cfg, h, positions)
+    if self_kv is None:
+        a = L.gqa_attention(q, k, v, causal=True, q_block=cfg.q_block)
+        new_self = (k, v)
+    else:
+        kc, vc = self_kv
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0, 0))
+        a = L.gqa_attention(q, kc, vc, causal=True, base_pos=pos,
+                            q_block=cfg.q_block)
+        new_self = (kc, vc)
+    x = x + L.attn_out(lp["self_attn"], a, B, S)
+    hx = L.rms_norm(x, lp["ln_x"], cfg.norm_eps)
+    qx = (hx @ lp["cross_attn"]["wq"]).reshape(B, S, cfg.n_heads, cfg.hd)
+    ax = L.gqa_attention(qx, enc_kv[0], enc_kv[1], causal=False,
+                         q_block=cfg.q_block)
+    x = x + L.attn_out(lp["cross_attn"], ax, B, S)
+    h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = x + L.swiglu(lp["mlp"], h2)
+    return shard(x, "data", None, None), new_self
+
+
+def _cross_kv(lp, cfg, enc_out):
+    B, T, _ = enc_out.shape
+    k = (enc_out @ lp["cross_attn"]["wk"]).reshape(B, T, cfg.n_kv_heads, cfg.hd)
+    v = (enc_out @ lp["cross_attn"]["wv"]).reshape(B, T, cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+def loss(params, cfg, batch):
+    """batch: frame_embeds [B,T,D], tokens [B,S], labels [B,S]."""
+    enc_out = encode(params, cfg, batch["frame_embeds"])
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+    x = shard(x, "data", None, None)
+    positions = jnp.arange(tokens.shape[1])
+
+    def block(xx, lp):
+        enc_kv = _cross_kv(lp, cfg, enc_out)
+        y, _ = _dec_block(lp, cfg, xx, positions, enc_kv)
+        return y
+
+    f = TF._maybe_remat(block, cfg)
+    x, _ = jax.lax.scan(lambda c, lp: (f(c, lp), None), x, params["dec_layers"])
+    logits = TF.logits_of(params, cfg, x)
+    labels = batch["labels"]
+    return L.softmax_xent(logits, jnp.maximum(labels, 0), mask=labels >= 0)
+
+
+def init_cache(cfg, batch: int, max_len: int, src_len: int, sealed=False):
+    K, hd = cfg.n_kv_heads, cfg.hd
+    nd = cfg.encdec.n_dec_layers
+    dt = cfg.act_dtype
+    udt = cipher.uint_dtype_for(dt)
+    mk = (lambda s: jnp.zeros(s, udt)) if sealed else (lambda s: jnp.zeros(s, dt))
+    c = {"pos": jnp.zeros((), jnp.int32),
+         ("k_ct" if sealed else "k"): mk((nd, batch, max_len, K, hd)),
+         ("v_ct" if sealed else "v"): mk((nd, batch, max_len, K, hd)),
+         ("xk_ct" if sealed else "xk"): mk((nd, batch, src_len, K, hd)),
+         ("xv_ct" if sealed else "xv"): mk((nd, batch, src_len, K, hd))}
+    if sealed:
+        c["nonce"] = jnp.zeros((), jnp.uint32)
+    return c
+
+
+def cache_specs(cfg, sealed: bool = False):
+    kv = (None, "data", "model", None, None)
+    names = ("k_ct", "v_ct", "xk_ct", "xv_ct") if sealed else ("k", "v", "xk", "xv")
+    out = {n: kv for n in names}
+    out["pos"] = "r"
+    if sealed:
+        out["nonce"] = "r"
+    return out
+
+
+def prefill(params, cfg, batch, max_len: int, seal_ctx=None):
+    """Encode source; prefill decoder over the BOS/prompt tokens."""
+    enc_out = encode(params, cfg, batch["frame_embeds"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+    positions = jnp.arange(S)
+
+    def body(carry, lp):
+        enc_kv = _cross_kv(lp, cfg, enc_out)
+        y, kv = _dec_block(lp, cfg, carry, positions, enc_kv)
+        return y, (kv[0], kv[1], enc_kv[0], enc_kv[1])
+
+    x, (ks, vs, xks, xvs) = jax.lax.scan(body, x, params["dec_layers"])
+    pad = max_len - S
+    ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"pos": jnp.asarray(S, jnp.int32)}
+    if seal_ctx is not None:
+        key, nonce = seal_ctx
+        lids = jnp.arange(cfg.encdec.n_dec_layers, dtype=jnp.uint32)
+        def seal_layer(l, a, b, c, d):
+            sub = TF._layer_nonce(nonce, l)
+            return (cipher.seal_bits(a, key, sub * 4),
+                    cipher.seal_bits(b, key, sub * 4 + 1),
+                    cipher.seal_bits(c, key, sub * 4 + 2),
+                    cipher.seal_bits(d, key, sub * 4 + 3))
+        k_ct, v_ct, xk_ct, xv_ct = jax.vmap(seal_layer)(lids, ks, vs, xks, xvs)
+        cache.update({"k_ct": k_ct, "v_ct": v_ct, "xk_ct": xk_ct,
+                      "xv_ct": xv_ct, "nonce": jnp.asarray(nonce, jnp.uint32)})
+    else:
+        cache.update({"k": ks, "v": vs, "xk": xks, "xv": xvs})
+    logits = TF.logits_of(params, cfg, x[:, -1:, :])[:, 0]
+    return logits, cache
+
+
+def decode_step(params, cfg, cache, tokens, seal_ctx=None):
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tokens[:, None], axis=0).astype(cfg.act_dtype)
+    positions = jnp.broadcast_to(pos, (B, 1))
+    sealed = seal_ctx is not None
+    key = seal_ctx[0] if sealed else None
+
+    def body(carry, xs):
+        x, = carry
+        if sealed:
+            lp, kc, vc, xkc, xvc, lid = xs
+            sub = TF._layer_nonce(cache["nonce"], lid)
+            T, K = kc.shape[1], kc.shape[2]
+            kcache = cipher.unseal_bits(kc, key, sub * 4, cfg.act_dtype)
+            vcache = cipher.unseal_bits(vc, key, sub * 4 + 1, cfg.act_dtype)
+            xk = cipher.unseal_bits(xkc, key, sub * 4 + 2, cfg.act_dtype)
+            xv = cipher.unseal_bits(xvc, key, sub * 4 + 3, cfg.act_dtype)
+            tmask = (jnp.arange(T) < pos)[None, :, None, None]
+            zero = jnp.zeros((), cfg.act_dtype)
+            kcache = jnp.where(tmask, kcache, zero)
+            vcache = jnp.where(tmask, vcache, zero)
+        else:
+            lp, kcache, vcache, xk, xv, lid = xs
+        y, (nk, nv) = _dec_block(lp, cfg, x, positions, (xk, xv),
+                                 self_kv=(kcache, vcache), pos=pos)
+        if sealed:
+            T, K = kc.shape[1], kc.shape[2]
+            rows = ((jnp.arange(B, dtype=jnp.uint32)[:, None, None] * jnp.uint32(T)
+                     + pos.astype(jnp.uint32)) * jnp.uint32(K)
+                    + jnp.arange(K, dtype=jnp.uint32)[None, None, :])
+            new_k = jax.lax.dynamic_slice(nk, (0, pos, 0, 0), (B, 1, K, cfg.hd))
+            new_v = jax.lax.dynamic_slice(nv, (0, pos, 0, 0), (B, 1, K, cfg.hd))
+            kc2 = jax.lax.dynamic_update_slice(
+                kc, cipher.seal_bits_slice(new_k, key, sub * 4, rows),
+                (0, pos, 0, 0))
+            vc2 = jax.lax.dynamic_update_slice(
+                vc, cipher.seal_bits_slice(new_v, key, sub * 4 + 1, rows),
+                (0, pos, 0, 0))
+            return (y,), (kc2, vc2)
+        return (y,), (nk, nv)
+
+    lids = jnp.arange(cfg.encdec.n_dec_layers, dtype=jnp.uint32)
+    if sealed:
+        xs = (params["dec_layers"], cache["k_ct"], cache["v_ct"],
+              cache["xk_ct"], cache["xv_ct"], lids)
+    else:
+        xs = (params["dec_layers"], cache["k"], cache["v"],
+              cache["xk"], cache["xv"], lids)
+    (x,), (nk, nv) = jax.lax.scan(body, (x,), xs)
+    logits = TF.logits_of(params, cfg, x)[:, 0]
+    new_cache = dict(cache)
+    new_cache["pos"] = pos + 1
+    if sealed:
+        new_cache.update({"k_ct": nk, "v_ct": nv})
+    else:
+        new_cache.update({"k": nk, "v": nv})
+    return logits, new_cache

@@ -1,0 +1,215 @@
+"""Shared building blocks: norms, RoPE, blocked GQA attention, SwiGLU, embeds.
+
+Attention is block-processed over the query axis (lax.scan over q-blocks) so
+long-context prefill never materializes a [S, S] score matrix — per-block
+memory is q_block x T, which keeps the 32k prefill inside per-device HBM and
+gives XLA a natural loop to overlap.  Softmax is computed in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.sharding import shard
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * (d_in ** -0.5)).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def head_rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Per-head RMSNorm over head_dim (qwen3 qk_norm). x: [..., H, hd]."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, hd]; positions: [S] or [B, S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = (theta ** (-np.arange(0, half, dtype=np.float32) / half))
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[:, None] * freq[None, :]   # [S, half]
+        ang = ang[None, :, None, :]                                    # [1,S,1,half]
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * freq          # [B,S,half]
+        ang = ang[:, :, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x0, x1 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x0 * cos - x1 * sin, x1 * cos + x0 * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+_NEG_INF = -1e30
+
+
+def _attend_block(q, k, v, qpos, tpos, causal: bool, t_valid=None):
+    """q: [B,qb,K,G,hd]; k,v: [B,T,K,hd]; qpos [qb]; tpos [T]. -> [B,qb,K,G,hd]"""
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqkgd,btkd->bqkgt", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = jnp.ones((qpos.shape[0], tpos.shape[0]), bool)
+    if causal:
+        mask = tpos[None, :] <= qpos[:, None]
+    if t_valid is not None:
+        mask = mask & (tpos[None, :] < t_valid)
+    logits = jnp.where(mask[None, :, None, None, :], logits, _NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bqkgt,btkd->bqkgd", probs, v).astype(v.dtype)
+
+
+def gqa_attention(q, k, v, *, causal: bool = True, q_block: int = 512,
+                  base_pos: int = 0, t_valid=None):
+    """Blocked grouped-query attention.
+
+    q: [B, S, H, hd];  k, v: [B, T, K, hd] with H = K * G.
+    t_valid: optional scalar — number of valid cache positions (decode).
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd)
+    tpos = jnp.arange(T)
+
+    if S == 1 or S <= q_block:
+        qpos = base_pos + jnp.arange(S)
+        out = _attend_block(qg, k, v, qpos, tpos, causal, t_valid)
+        return out.reshape(B, S, H, hd)
+
+    pad = (-S) % q_block
+    if pad:  # pad queries to a block multiple; padded rows are sliced off below
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    Sp = S + pad
+    nb = Sp // q_block
+    qb = qg.reshape(B, nb, q_block, K, G, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    def step(_, inp):
+        qi, idx = inp
+        qpos = base_pos + idx * q_block + jnp.arange(q_block)
+        return None, _attend_block(qi, k, v, qpos, tpos, causal, t_valid)
+
+    _, out = jax.lax.scan(step, None, (qb, jnp.arange(nb)))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sp, H, hd)
+    return out[:, :S] if pad else out
+
+
+# ---------------------------------------------------------------------------
+# attention block params + apply (shared by dense / moe / encdec / vlm / zamba)
+# ---------------------------------------------------------------------------
+
+def attn_params(key, cfg, d_model=None):
+    d = d_model or cfg.d_model
+    hd, H, K = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], d, H * hd, cfg.p_dtype),
+        "wk": dense_init(ks[1], d, K * hd, cfg.p_dtype),
+        "wv": dense_init(ks[2], d, K * hd, cfg.p_dtype),
+        "wo": dense_init(ks[3], H * hd, d, cfg.p_dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), cfg.p_dtype)
+        p["k_norm"] = jnp.ones((hd,), cfg.p_dtype)
+    return p
+
+
+def attn_specs(cfg):
+    p = {
+        "wq": (None, "model"), "wk": (None, "model"),
+        "wv": (None, "model"), "wo": ("model", None),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = (None,)
+        p["k_norm"] = (None,)
+    return p
+
+
+def project_qkv(p, cfg, x, positions):
+    """x: [B,S,D] -> q [B,S,H,hd], k,v [B,S,K,hd] with RoPE + optional qk-norm."""
+    B, S, _ = x.shape
+    hd, H, K = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, K, hd)
+    v = (x @ p["wv"]).reshape(B, S, K, hd)
+    if cfg.qk_norm:
+        q = head_rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = head_rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, "data", None, "model", None)
+    k = shard(k, "data", None, None, None)
+    return q, k, v
+
+
+def attn_out(p, x_attn, B, S):
+    return x_attn.reshape(B, S, -1) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def swiglu_params(key, d_model: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+        "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def swiglu_specs():
+    return {"w_gate": (None, "model"), "w_up": (None, "model"),
+            "w_down": ("model", None)}
+
+
+def swiglu(p, x):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = shard(h, "data", None, "model")
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# LM head / loss
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits: jax.Array, labels: jax.Array, mask=None):
+    """logits [B,S,V] (any float dtype), labels [B,S] int. Mean NLL."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,384 @@
+"""Token-choice top-k MoE transformer — moonshot (64e top-6) / llama4 (128e top-1).
+
+Dispatch is capacity-bounded scatter/gather (no [T, E, C] one-hot): position-in-
+expert comes from a cumsum over the [T*k, E] assignment matrix, tokens beyond
+capacity are dropped (contribute zero), and expert FFNs run as a single batched
+einsum over the [E, C, D] buffer, which shards cleanly with E on the model axis
+(expert parallelism).  The router runs in f32.
+
+Two stack modes:
+  * moe_every=1 (moonshot): every layer is attention + MoE (+ shared expert).
+  * moe_every=2 (llama4-maverick): layers alternate dense-MLP / MoE; the scan
+    unit is a PAIR (attn+dense, attn+MoE), so 48 layers = 24 scanned pairs.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..core import cipher
+from ..parallel.sharding import shard
+from . import layers as L
+from . import transformer as TF
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN
+# ---------------------------------------------------------------------------
+
+def moe_params(key, cfg):
+    m = cfg.moe
+    ks = jax.random.split(key, 5)
+    E, D, F = m.n_experts, cfg.d_model, cfg.d_ff
+    p = {
+        "router": L.dense_init(ks[0], D, E, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, D, F), jnp.float32)
+                   * D ** -0.5).astype(cfg.p_dtype),
+        "w_up": (jax.random.normal(ks[2], (E, D, F), jnp.float32)
+                 * D ** -0.5).astype(cfg.p_dtype),
+        "w_down": (jax.random.normal(ks[3], (E, F, D), jnp.float32)
+                   * F ** -0.5).astype(cfg.p_dtype),
+    }
+    if m.shared_expert:
+        p["shared"] = L.swiglu_params(ks[4], D, m.d_ff_shared or F, cfg.p_dtype)
+    return p
+
+
+def moe_specs(cfg):
+    d = "data" if cfg.fsdp else None
+    p = {
+        "router": (None, None),
+        "w_gate": ("model", d, None),
+        "w_up": ("model", d, None),
+        "w_down": ("model", None, d),
+    }
+    if cfg.moe.shared_expert:
+        p["shared"] = L.swiglu_specs()
+    return p
+
+
+def capacity(cfg, n_tokens: int) -> int:
+    m = cfg.moe
+    c = int(math.ceil(n_tokens * m.top_k / m.n_experts * m.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def moe_ffn(p, cfg, x):
+    """x: [B, S, D] -> [B, S, D] routed-expert output (shared expert separate)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    T, E, k = B * S, m.n_experts, m.top_k
+    C = capacity(cfg, T)
+    xt = x.reshape(T, D)
+
+    gates = jax.nn.softmax((xt.astype(jnp.float32) @ p["router"]), axis=-1)
+    gv, gi = jax.lax.top_k(gates, k)                                      # [T,k]
+    gv = gv / jnp.maximum(gv.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = gi.reshape(-1)                                               # [T*k]
+    onehot = (flat_e[:, None] == jnp.arange(E)[None, :]).astype(jnp.int32)
+    ds = cfg.moe_dispatch_shards
+    if ds > 1 and (T * k) % ds == 0:
+        # SHARD-LOCAL dispatch: each data shard owns a contiguous slice of
+        # the capacity axis and packs only its own tokens there, so the
+        # scatter never crosses shards and the expert-buffer all-reduce
+        # (the dominant MoE collective) disappears.  Per-shard capacity is
+        # C/ds — slightly more drops under imbalance (standard EP trade).
+        seg = (T * k) // ds
+        Cl = max(8, C // ds)
+        oh = onehot.reshape(ds, seg, E)
+        pos_l = (jnp.cumsum(oh, axis=1) * oh).sum(-1) - 1                 # [ds,seg]
+        keep = (pos_l < Cl).reshape(-1)
+        base = (jnp.arange(ds, dtype=jnp.int32) * Cl)[:, None]
+        slot_c = (jnp.where(pos_l < Cl, pos_l, 0) + base).reshape(-1)
+        C = Cl * ds
+    else:
+        pos_in_e = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1      # [T*k]
+        keep = pos_in_e < C
+        slot_c = jnp.where(keep, pos_in_e, 0)
+    slot_e = jnp.where(keep, flat_e, 0)
+
+    x_rep = jnp.repeat(xt, k, axis=0) * keep[:, None].astype(xt.dtype)
+    buf = jnp.zeros((E, C, D), xt.dtype).at[slot_e, slot_c].add(x_rep)
+    buf = shard(buf, "model", "data" if ds > 1 else None, None)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    h = shard(h, "model", None, None)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+    y_rep = out_buf[slot_e, slot_c] * (gv.reshape(-1) * keep)[:, None].astype(xt.dtype)
+    y = y_rep.reshape(T, k, D).sum(axis=1)
+    return shard(y.reshape(B, S, D), "data", None, None)
+
+
+def _apply_moe(lp_moe, cfg, h2):
+    from ..parallel import sharding as _shd
+    ctx = _shd.active()
+    if (cfg.moe_ep and ctx is not None
+            and "model" in ctx.mesh.axis_names
+            and cfg.moe.n_experts % ctx.mesh.shape["model"] == 0):
+        from . import moe_ep
+        y = moe_ep.moe_ffn_ep(lp_moe, cfg, h2, ctx.mesh)
+    else:
+        y = moe_ffn(lp_moe, cfg, h2)
+    if cfg.moe.shared_expert:
+        y = y + L.swiglu(lp_moe["shared"], h2)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# stack units (single layer, or dense/MoE pair for moe_every=2)
+# ---------------------------------------------------------------------------
+
+def _unit_layers(cfg) -> tuple[int, int]:
+    """(scan_units, layers_per_unit)."""
+    if cfg.moe.moe_every == 2:
+        assert cfg.n_layers % 2 == 0
+        return cfg.n_layers // 2, 2
+    return cfg.n_layers, 1
+
+
+def _attn_sub(lp, cfg, x, positions, kv=None, pos=None):
+    """Pre-norm attention sub-block. Returns (x, (k, v) new cache or fresh)."""
+    B, S, _ = x.shape
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = L.project_qkv(lp["attn"], cfg, h, positions)
+    if kv is None:
+        a = L.gqa_attention(q, k, v, causal=True, q_block=cfg.q_block)
+        new_kv = (k, v)
+    else:
+        kc, vc = kv
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0, 0))
+        a = L.gqa_attention(q, kc, vc, causal=True, base_pos=pos,
+                            q_block=cfg.q_block)
+        new_kv = (kc, vc)
+    return x + L.attn_out(lp["attn"], a, B, S), new_kv
+
+
+def _unit_init(key, cfg):
+    if cfg.moe.moe_every == 2:
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {
+            "ln1": jnp.ones((2, cfg.d_model), cfg.p_dtype),
+            "ln2": jnp.ones((2, cfg.d_model), cfg.p_dtype),
+            "attn": jax.vmap(lambda k: L.attn_params(k, cfg))(
+                jnp.stack(jax.random.split(k1, 2))),
+            "mlp": L.swiglu_params(k2, cfg.d_model,
+                                   cfg.moe.d_ff_dense or 2 * cfg.d_ff,
+                                   cfg.p_dtype),
+            "moe": moe_params(k3, cfg),
+        }
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), cfg.p_dtype),
+        "attn": L.attn_params(k1, cfg),
+        "ln2": jnp.ones((cfg.d_model,), cfg.p_dtype),
+        "moe": moe_params(k2, cfg),
+    }
+
+
+def _unit_specs(cfg):
+    fs = TF._fsdp if cfg.fsdp else (lambda t: t)
+    if cfg.moe.moe_every == 2:
+        stack1 = lambda t: jax.tree_util.tree_map(
+            lambda s: (None, *s), t, is_leaf=lambda s: isinstance(s, tuple))
+        return {"ln1": (None, None), "ln2": (None, None),
+                "attn": stack1(fs(L.attn_specs(cfg))),
+                "mlp": fs(L.swiglu_specs()),
+                "moe": moe_specs(cfg)}
+    return {"ln1": (None,), "attn": fs(L.attn_specs(cfg)),
+            "ln2": (None,), "moe": moe_specs(cfg)}
+
+
+def _unit_apply(lp, cfg, x, positions, kv=None, pos=None):
+    """Apply one scan unit. kv: None or stacked (k,v) with leading dim lpu."""
+    if cfg.moe.moe_every == 2:
+        lp0 = {"ln1": lp["ln1"][0], "attn":
+               jax.tree_util.tree_map(lambda a: a[0], lp["attn"])}
+        lp1 = {"ln1": lp["ln1"][1], "attn":
+               jax.tree_util.tree_map(lambda a: a[1], lp["attn"])}
+        x, kv0 = _attn_sub(lp0, cfg, x, positions,
+                           None if kv is None else (kv[0][0], kv[1][0]), pos)
+        h = L.rms_norm(x, lp["ln2"][0], cfg.norm_eps)
+        x = x + L.swiglu(lp["mlp"], h)
+        x = shard(x, "data", None, None)
+        x, kv1 = _attn_sub(lp1, cfg, x, positions,
+                           None if kv is None else (kv[0][1], kv[1][1]), pos)
+        h = L.rms_norm(x, lp["ln2"][1], cfg.norm_eps)
+        x = x + _apply_moe(lp["moe"], cfg, h)
+        x = shard(x, "data", None, None)
+        ks = jnp.stack([kv0[0], kv1[0]])
+        vs = jnp.stack([kv0[1], kv1[1]])
+        return x, (ks, vs)
+    x, kv_n = _attn_sub(lp, cfg, x, positions,
+                        None if kv is None else (kv[0][0], kv[1][0]), pos)
+    h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = x + _apply_moe(lp["moe"], cfg, h)
+    x = shard(x, "data", None, None)
+    return x, (kv_n[0][None], kv_n[1][None])
+
+
+# ---------------------------------------------------------------------------
+# params / forward / loss
+# ---------------------------------------------------------------------------
+
+def init(key, cfg):
+    ks = jax.random.split(key, 3)
+    units, _ = _unit_layers(cfg)
+    lkeys = jax.random.split(ks[0], units)
+    return {
+        "embed": L.embed_init(ks[1], cfg.vocab, cfg.d_model, cfg.p_dtype),
+        "layers": jax.vmap(lambda k: _unit_init(k, cfg))(lkeys),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.p_dtype),
+        "unembed": L.dense_init(ks[2], cfg.d_model, cfg.vocab, cfg.p_dtype),
+    }
+
+
+def param_specs(cfg):
+    stack = lambda t: jax.tree_util.tree_map(
+        lambda s: (None, *s), t, is_leaf=lambda s: isinstance(s, tuple))
+    return {"embed": ("model", "data"), "layers": stack(_unit_specs(cfg)),
+            "final_norm": (None,), "unembed": ("data", "model")}
+
+
+def _forward(params, cfg, x, positions):
+    f = TF._maybe_remat(
+        lambda xx, lp: _unit_apply(lp, cfg, xx, positions), cfg)
+
+    def body(carry, lp):
+        y, kv = f(carry, lp)
+        return y, kv
+
+    return jax.lax.scan(body, x, params["layers"])
+
+
+def loss(params, cfg, batch):
+    x, n_front = TF._embed_inputs(params, cfg, batch)
+    positions = jnp.arange(x.shape[1])
+    x, _ = _forward(params, cfg, x, positions)
+    if n_front:
+        x = x[:, n_front:]
+    logits = TF.logits_of(params, cfg, x)
+    labels = batch["labels"]
+    return L.softmax_xent(logits, jnp.maximum(labels, 0), mask=labels >= 0)
+
+
+# ---------------------------------------------------------------------------
+# serving — cache layout [units, lpu, B, T, K, hd]
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch, max_len, sealed=False):
+    units, lpu = _unit_layers(cfg)
+    K, hd = cfg.n_kv_heads, cfg.hd
+    shape = (units, lpu, batch, max_len, K, hd)
+    dt = cfg.act_dtype
+    cache = {"pos": jnp.zeros((), jnp.int32)}
+    if sealed:
+        udt = cipher.uint_dtype_for(dt)
+        cache.update({"k_ct": jnp.zeros(shape, udt),
+                      "v_ct": jnp.zeros(shape, udt),
+                      "nonce": jnp.zeros((), jnp.uint32)})
+    else:
+        cache.update({"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)})
+    return cache
+
+
+def cache_specs(cfg, sealed: bool = False):
+    kv = (None, None, "data", "model", None, None)
+    out = {"pos": "r"}
+    if sealed:
+        out.update({"k_ct": kv, "v_ct": kv, "nonce": "r"})
+    else:
+        out.update({"k": kv, "v": kv})
+    return out
+
+
+def _seal_unit(key, nonce, uid, kk, vv):
+    sub = TF._layer_nonce(nonce, uid)
+    return cipher.seal_bits(kk, key, sub * 2), cipher.seal_bits(vv, key, sub * 2 + 1)
+
+
+def prefill(params, cfg, batch, max_len: int, seal_ctx=None):
+    x, _ = TF._embed_inputs(params, cfg, batch)
+    S = x.shape[1]
+    x, (ks, vs) = _forward(params, cfg, x, jnp.arange(S))
+    # ks/vs: [units, lpu, B, S, K, hd]
+    pad = max_len - S
+    ks = jnp.pad(ks, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    vs = jnp.pad(vs, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"pos": jnp.asarray(S, jnp.int32)}
+    if seal_ctx is not None:
+        key, nonce = seal_ctx
+        units, _ = _unit_layers(cfg)
+        uids = jnp.arange(units, dtype=jnp.uint32)
+        k_ct, v_ct = jax.vmap(lambda u, a, b: _seal_unit(key, nonce, u, a, b))(
+            uids, ks, vs)
+        cache.update({"k_ct": k_ct, "v_ct": v_ct,
+                      "nonce": jnp.asarray(nonce, jnp.uint32)})
+    else:
+        cache.update({"k": ks, "v": vs})
+    logits = TF.logits_of(params, cfg, x[:, -1:, :])
+    return logits[:, 0], cache
+
+
+def decode_step(params, cfg, cache, tokens, seal_ctx=None):
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tokens[:, None], axis=0).astype(cfg.act_dtype)
+    positions = jnp.broadcast_to(pos, (B, 1))
+    sealed = seal_ctx is not None
+    key = seal_ctx[0] if sealed else None
+    units, lpu = _unit_layers(cfg)
+
+    def body(carry, xs):
+        x, = carry
+        if sealed:
+            lp, kc, vc, uid = xs                      # kc: [lpu,B,T,K,hd] uintN
+            sub = TF._layer_nonce(cache["nonce"], uid)
+            T, K = kc.shape[2], kc.shape[3]
+            kcache = cipher.unseal_bits(kc, key, sub * 2, cfg.act_dtype)
+            vcache = cipher.unseal_bits(vc, key, sub * 2 + 1, cfg.act_dtype)
+            tmask = (jnp.arange(T) < pos)[None, None, :, None, None]
+            zero = jnp.zeros((), cfg.act_dtype)
+            kcache = jnp.where(tmask, kcache, zero)
+            vcache = jnp.where(tmask, vcache, zero)
+        else:
+            lp, kcache, vcache, uid = xs
+        y, (nk, nv) = _unit_apply(lp, cfg, x, positions, kv=(kcache, vcache),
+                                  pos=pos)
+        if sealed:
+            T, K = kc.shape[2], kc.shape[3]
+            new_k = jax.lax.dynamic_slice(
+                nk, (0, 0, pos, 0, 0), (lpu, B, 1, K, cfg.hd))
+            new_v = jax.lax.dynamic_slice(
+                nv, (0, 0, pos, 0, 0), (lpu, B, 1, K, cfg.hd))
+            rows = (((jnp.arange(lpu, dtype=jnp.uint32)[:, None, None, None]
+                      * jnp.uint32(B)
+                      + jnp.arange(B, dtype=jnp.uint32)[None, :, None, None])
+                     * jnp.uint32(T) + pos.astype(jnp.uint32)) * jnp.uint32(K)
+                    + jnp.arange(K, dtype=jnp.uint32)[None, None, None, :])
+            kc2 = jax.lax.dynamic_update_slice(
+                kc, cipher.seal_bits_slice(new_k, key, sub * 2, rows),
+                (0, 0, pos, 0, 0))
+            vc2 = jax.lax.dynamic_update_slice(
+                vc, cipher.seal_bits_slice(new_v, key, sub * 2 + 1, rows),
+                (0, 0, pos, 0, 0))
+            return (y,), (kc2, vc2)
+        return (y,), (nk, nv)
+
+    uids = jnp.arange(units, dtype=jnp.uint32)
+    xs = ((params["layers"], cache["k_ct"], cache["v_ct"], uids) if sealed
+          else (params["layers"], cache["k"], cache["v"], uids))
+    (x,), (nk, nv) = jax.lax.scan(body, (x,), xs)
+    logits = TF.logits_of(params, cfg, x)[:, 0]
+    new_cache = dict(cache)
+    new_cache["pos"] = pos + 1
+    if sealed:
+        new_cache.update({"k_ct": nk, "v_ct": nv})
+    else:
+        new_cache.update({"k": nk, "v": nv})
+    return logits, new_cache

@@ -1,0 +1,289 @@
+"""RWKV-6 "Finch" — attention-free linear RNN with data-dependent decay.
+
+Per head (dim hd), the WKV state S is [hd_k, hd_v]:
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+with w_t = exp(-exp(w_base + LoRA_w(x~_t))) the *data-dependent* decay (the
+Finch contribution), token-shift mixing x~ = lerp(x_t, x_{t-1}, mu + LoRA(x)),
+and a channel-mix FFN (squared-ReLU).  Sequence processing is a lax.scan over
+time; decode carries (S, shift states) — O(1) state, which is why rwkv6 runs
+the long_500k cell that quadratic-attention archs skip.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import shard
+from . import layers as L
+from . import transformer as TF
+
+_MIX = ("r", "k", "v", "w", "g")
+
+
+def _tm_init(key, cfg):
+    D = cfg.d_model
+    hd = cfg.rwkv.head_dim
+    H = D // hd
+    r = cfg.rwkv.decay_lora
+    ks = jax.random.split(key, 12)
+    p = {
+        "mu": jnp.full((len(_MIX), D), 0.5, cfg.p_dtype),     # static lerp factors
+        "mix_lora_a": L.dense_init(ks[0], D, 32 * len(_MIX), cfg.p_dtype),
+        "mix_lora_b": (jax.random.normal(ks[1], (len(_MIX), 32, D), jnp.float32)
+                       * 0.01).astype(cfg.p_dtype),
+        "wr": L.dense_init(ks[2], D, D, cfg.p_dtype),
+        "wk": L.dense_init(ks[3], D, D, cfg.p_dtype),
+        "wv": L.dense_init(ks[4], D, D, cfg.p_dtype),
+        "wg": L.dense_init(ks[5], D, D, cfg.p_dtype),
+        "wo": L.dense_init(ks[6], D, D, cfg.p_dtype),
+        # data-dependent decay: w_t = exp(-exp(w_base + B(tanh(A x~_w))))
+        "w_base": jnp.full((D,), -6.0, cfg.p_dtype),
+        "w_lora_a": L.dense_init(ks[7], D, r, cfg.p_dtype),
+        "w_lora_b": (jax.random.normal(ks[8], (r, D), jnp.float32)
+                     * 0.01).astype(cfg.p_dtype),
+        "u": (jax.random.normal(ks[9], (H, hd), jnp.float32)
+              * 0.1).astype(cfg.p_dtype),                      # per-head bonus
+        "ln_x": jnp.ones((D,), cfg.p_dtype),                   # group-norm scale
+    }
+    return p
+
+
+def _cm_init(key, cfg):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((D,), 0.5, cfg.p_dtype),
+        "mu_r": jnp.full((D,), 0.5, cfg.p_dtype),
+        "wk": L.dense_init(ks[0], D, F, cfg.p_dtype),
+        "wv": L.dense_init(ks[1], F, D, cfg.p_dtype),
+        "wr": L.dense_init(ks[2], D, D, cfg.p_dtype),
+    }
+
+
+def _block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), cfg.p_dtype),
+        "tm": _tm_init(k1, cfg),
+        "ln2": jnp.ones((cfg.d_model,), cfg.p_dtype),
+        "cm": _cm_init(k2, cfg),
+    }
+
+
+def init(key, cfg):
+    ks = jax.random.split(key, 3)
+    lkeys = jax.random.split(ks[0], cfg.n_layers)
+    return {
+        "embed": L.embed_init(ks[1], cfg.vocab, cfg.d_model, cfg.p_dtype),
+        "layers": jax.vmap(lambda k: _block_init(k, cfg))(lkeys),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.p_dtype),
+        "unembed": L.dense_init(ks[2], cfg.d_model, cfg.vocab, cfg.p_dtype),
+    }
+
+
+def param_specs(cfg):
+    tm = {
+        "mu": (None, None), "mix_lora_a": (None, None),
+        "mix_lora_b": (None, None, None),
+        "wr": ("data", "model"), "wk": ("data", "model"),
+        "wv": ("data", "model"), "wg": ("data", "model"),
+        "wo": ("model", "data"),
+        "w_base": (None,), "w_lora_a": (None, None), "w_lora_b": (None, None),
+        "u": (None, None), "ln_x": (None,),
+    }
+    cm = {"mu_k": (None,), "mu_r": (None,),
+          "wk": ("data", "model"), "wv": ("model", "data"), "wr": ("data", None)}
+    block = {"ln1": (None,), "tm": tm, "ln2": (None,), "cm": cm}
+    stack = jax.tree_util.tree_map(lambda s: (None, *s), block,
+                                   is_leaf=lambda s: isinstance(s, tuple))
+    return {"embed": ("model", "data"), "layers": stack,
+            "final_norm": (None,), "unembed": ("data", "model")}
+
+
+# ---------------------------------------------------------------------------
+# time mix
+# ---------------------------------------------------------------------------
+
+def _token_shift(x, prev):
+    """[B,S,D] shifted right by one; position 0 takes ``prev`` [B,D]."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _ddlerp(p, x, xs):
+    """Finch data-dependent lerp for the five mix streams. -> dict of [B,S,D]."""
+    delta = xs - x
+    base = x + delta * p["mu"][:, None, None, :]                       # [5,B,S,D]
+    lora = jnp.tanh(x @ p["mix_lora_a"])                               # [B,S,5*32]
+    B_, S_, _ = x.shape
+    lora = lora.reshape(B_, S_, len(_MIX), 32).transpose(2, 0, 1, 3)   # [5,B,S,32]
+    adj = jnp.einsum("nbsr,nrd->nbsd", lora, p["mix_lora_b"])
+    mixed = base + delta * adj
+    return {name: mixed[i] for i, name in enumerate(_MIX)}
+
+
+def time_mix(p, cfg, x, prev_x, state):
+    """x: [B,S,D]; prev_x: [B,D]; state: [B,H,hd,hd] -> (y, last_x, state)."""
+    B, S, D = x.shape
+    hd = cfg.rwkv.head_dim
+    H = D // hd
+    xs = _token_shift(x, prev_x)
+    m = _ddlerp(p, x, xs)
+    r = (m["r"] @ p["wr"]).reshape(B, S, H, hd)
+    k = (m["k"] @ p["wk"]).reshape(B, S, H, hd)
+    v = (m["v"] @ p["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(m["g"] @ p["wg"])
+    w_log = p["w_base"].astype(jnp.float32) + \
+        jnp.tanh(m["w"] @ p["w_lora_a"]).astype(jnp.float32) @ p["w_lora_b"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log)).reshape(B, S, H, hd)                  # decay in (0,1)
+    u = p["u"].astype(jnp.float32)
+
+    def step(S_c, inp):
+        r_t, k_t, v_t, w_t = inp                                       # [B,H,hd]
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t.astype(jnp.float32),
+                        v_t.astype(jnp.float32))
+        y = jnp.einsum("bhk,bhkv->bhv", r_t.astype(jnp.float32),
+                       S_c + u[None, :, :, None] * kv)
+        S_n = w_t.astype(jnp.float32)[..., None] * S_c + kv
+        return S_n, y
+
+    seq = (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+           v.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+    state, ys = jax.lax.scan(step, state, seq)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+    y = L.rms_norm(y, p["ln_x"], cfg.norm_eps)                          # per-channel norm
+    y = (y * g) @ p["wo"]
+    return y, x[:, -1, :], state
+
+
+def channel_mix(p, x, prev_x):
+    xs = _token_shift(x, prev_x)
+    xk = x + (xs - x) * p["mu_k"]
+    xr = x + (xs - x) * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"]), x[:, -1, :]
+
+
+def _block(lp, cfg, x, states):
+    """states: dict(wkv [B,H,hd,hd], tm_x [B,D], cm_x [B,D])."""
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    y, tm_x, wkv = time_mix(lp["tm"], cfg, h, states["tm_x"], states["wkv"])
+    x = x + y
+    h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    y2, cm_x = channel_mix(lp["cm"], h2, states["cm_x"])
+    x = x + y2
+    x = shard(x, "data", None, None)
+    return x, {"wkv": wkv, "tm_x": tm_x, "cm_x": cm_x}
+
+
+def init_state(cfg, batch: int, n_layers: int | None = None):
+    nl = n_layers if n_layers is not None else cfg.n_layers
+    hd = cfg.rwkv.head_dim
+    H = cfg.d_model // hd
+    return {
+        "wkv": jnp.zeros((nl, batch, H, hd, hd), jnp.float32),
+        "tm_x": jnp.zeros((nl, batch, cfg.d_model), cfg.act_dtype),
+        "cm_x": jnp.zeros((nl, batch, cfg.d_model), cfg.act_dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def init_state_sealed(cfg, batch: int, n_layers: int | None = None):
+    """Sealed-state structure (ct dtypes) — zeros stand-in; real values come
+    from prefill's _seal_state."""
+    st = init_state(cfg, batch, n_layers)
+    from ..core import cipher
+    st = {
+        "wkv": jnp.zeros(st["wkv"].shape, jnp.uint32),
+        "tm_x": jnp.zeros(st["tm_x"].shape, cipher.uint_dtype_for(cfg.act_dtype)),
+        "cm_x": jnp.zeros(st["cm_x"].shape, cipher.uint_dtype_for(cfg.act_dtype)),
+        "pos": jnp.zeros((), jnp.int32),
+        "nonce": jnp.zeros((), jnp.uint32),
+    }
+    return st
+
+
+def state_specs(cfg, sealed: bool = False):
+    s = {"wkv": (None, "data", "model", None, None),
+         "tm_x": (None, "data", None), "cm_x": (None, "data", None),
+         "pos": "r"}
+    if sealed:
+        s.update({"nonce": "r"})
+    return s
+
+
+def _forward(params, cfg, x, states):
+    f = TF._maybe_remat(
+        lambda xx, inp: _block(inp[0], cfg, xx, inp[1]), cfg)
+
+    def body(carry, inp):
+        y, st = f(carry, inp)
+        return y, st
+
+    lstates = {k: v for k, v in states.items() if k != "pos" and k != "nonce"}
+    x, new_states = jax.lax.scan(body, x, (params["layers"], lstates))
+    return x, new_states
+
+
+def loss(params, cfg, batch):
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+    x = shard(x, "data", None, None)
+    states = init_state(cfg, tokens.shape[0])
+    x, _ = _forward(params, cfg, x, states)
+    logits = TF.logits_of(params, cfg, x)
+    labels = batch["labels"]
+    return L.softmax_xent(logits, jnp.maximum(labels, 0), mask=labels >= 0)
+
+
+def prefill(params, cfg, batch, max_len: int, seal_ctx=None):
+    """For an RNN the 'cache' is the state; max_len is irrelevant (O(1))."""
+    del max_len
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+    states = init_state(cfg, tokens.shape[0])
+    x, new_states = _forward(params, cfg, x, states)
+    new_states["pos"] = jnp.asarray(tokens.shape[1], jnp.int32)
+    logits = TF.logits_of(params, cfg, x[:, -1:, :])[:, 0]
+    if seal_ctx is not None:
+        new_states = _seal_state(new_states, seal_ctx)
+    return logits, new_states
+
+
+def _seal_state(states, seal_ctx):
+    from ..core import cipher
+    key, nonce = seal_ctx
+    out = dict(states)
+    out["wkv"] = cipher.seal_bits(states["wkv"], key, nonce * 4)
+    out["tm_x"] = cipher.seal_bits(states["tm_x"], key, nonce * 4 + 1)
+    out["cm_x"] = cipher.seal_bits(states["cm_x"], key, nonce * 4 + 2)
+    out["nonce"] = jnp.asarray(nonce, jnp.uint32)
+    return out
+
+
+def decode_step(params, cfg, states, tokens, seal_ctx=None):
+    """One token for the whole stack. states from init_state/prefill."""
+    sealed = seal_ctx is not None
+    if sealed:
+        key, _ = seal_ctx
+        nonce = states["nonce"]
+        states = _unseal_state_t(states, key, cfg)
+    x = jnp.take(params["embed"], tokens[:, None], axis=0).astype(cfg.act_dtype)
+    x, new_states = _forward(params, cfg, x, states)
+    new_states["pos"] = states["pos"] + 1
+    logits = TF.logits_of(params, cfg, x)[:, 0]
+    if sealed:
+        new_states = _seal_state({**new_states, "pos": new_states["pos"]},
+                                 (key, nonce + jnp.uint32(1)))
+    return logits, new_states
+
+
+def _unseal_state_t(states, key, cfg):
+    from ..core import cipher
+    n = states["nonce"]
+    return {
+        "wkv": cipher.unseal_bits(states["wkv"], key, n * 4, jnp.float32),
+        "tm_x": cipher.unseal_bits(states["tm_x"], key, n * 4 + 1, cfg.act_dtype),
+        "cm_x": cipher.unseal_bits(states["cm_x"], key, n * 4 + 2, cfg.act_dtype),
+        "pos": states["pos"],
+    }

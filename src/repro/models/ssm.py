@@ -1,0 +1,386 @@
+"""Mamba-2 (SSD) blocks + Zamba2-style hybrid stack.
+
+Mamba-2 head recurrence (scalar decay per head, state N):
+    h_t = a_t * h_{t-1} + (dt_t * x_t) (x) B_t        h: [p, N]
+    y_t = h_t . C_t + D * x_t
+with a_t = exp(-softplus(dt_t) * exp(A_log)), a causal depthwise conv over the
+(x, B, C) stream, and a silu(z) output gate.
+
+Zamba2 hybrid: a stack of Mamba-2 blocks with ONE shared full-attention
+transformer block (its own weights, reused) invoked every ``attn_every``
+layers on concat([x, x0]) — x0 is the embedding output (the Zamba trick).
+The stack is a python loop (heterogeneous), so scan_layers is ignored.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core import cipher
+from ..parallel.sharding import shard
+from . import layers as L
+from . import transformer as TF
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block
+# ---------------------------------------------------------------------------
+
+def _m2_dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = s.n_heads or d_inner // s.head_dim
+    return d_inner, H, s.head_dim, s.d_state
+
+
+def m2_init(key, cfg):
+    d_inner, H, p_, N = _m2_dims(cfg)
+    D = cfg.d_model
+    conv_dim = d_inner + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": L.dense_init(ks[0], D, 2 * d_inner + 2 * N + H, cfg.p_dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm.conv_width, conv_dim),
+                                     jnp.float32) * 0.1).astype(cfg.p_dtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.p_dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": jnp.ones((d_inner,), cfg.p_dtype),
+        "out_proj": L.dense_init(ks[2], d_inner, D, cfg.p_dtype),
+    }
+
+
+def m2_specs(cfg):
+    return {
+        "in_proj": ("data", "model"), "conv_w": (None, "model"),
+        "conv_b": ("model",), "A_log": (None,), "dt_bias": (None,),
+        "D": (None,), "norm": ("model",), "out_proj": ("model", "data"),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: [B,S,C]; w: [W,C]; state: [B,W-1,C] or None.
+    Returns (y [B,S,C], new_state [B,W-1,C])."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    new_state = xp[:, -(W - 1):, :] if W > 1 else state
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(W))
+    return jax.nn.silu(y + b[None, None, :]), new_state
+
+
+def m2_forward(p, cfg, x, ssm_state=None, conv_state=None):
+    """x: [B,S,D] -> (y [B,S,D], ssm_state [B,H,p,N] f32, conv_state)."""
+    d_inner, H, hp, N = _m2_dims(cfg)
+    B, S, D = x.shape
+    zxbcdt = x @ p["in_proj"]
+    z, xr, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N],
+        axis=-1)
+    xbc = jnp.concatenate([xr, Bc, Cc], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"].astype(jnp.float32)
+                                   .astype(xbc.dtype), p["conv_b"], conv_state)
+    xr, Bc, Cc = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    xh = xr.reshape(B, S, H, hp).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])           # [B,S,H]
+    a = jnp.exp(-dt * jnp.exp(p["A_log"])[None, None, :])                 # [B,S,H]
+    Bf = Bc.astype(jnp.float32)
+    Cf = Cc.astype(jnp.float32)
+
+    if ssm_state is None:
+        ssm_state = jnp.zeros((B, H, hp, N), jnp.float32)
+
+    def step(h, inp):
+        a_t, dtx_t, B_t, C_t = inp            # [B,H], [B,H,p], [B,N], [B,N]
+        h = a_t[..., None, None] * h + jnp.einsum("bhp,bn->bhpn", dtx_t, B_t)
+        y = jnp.einsum("bhpn,bn->bhp", h, C_t)
+        return h, y
+
+    dtx = dt[..., None] * xh                                              # [B,S,H,p]
+    seq = (a.transpose(1, 0, 2), dtx.transpose(1, 0, 2, 3),
+           Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2))
+    ssm_state, ys = jax.lax.scan(step, ssm_state, seq)
+    y = ys.transpose(1, 0, 2, 3)                                          # [B,S,H,p]
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], ssm_state, conv_state
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid stack
+# ---------------------------------------------------------------------------
+
+def _shared_attn_init(key, cfg):
+    """Shared transformer block over concat([x, x0]) (2D -> D projection)."""
+    ks = jax.random.split(key, 3)
+    return {
+        "concat_proj": L.dense_init(ks[0], 2 * cfg.d_model, cfg.d_model,
+                                    cfg.p_dtype),
+        "ln1": jnp.ones((cfg.d_model,), cfg.p_dtype),
+        "attn": L.attn_params(ks[1], cfg),
+        "ln2": jnp.ones((cfg.d_model,), cfg.p_dtype),
+        "mlp": L.swiglu_params(ks[2], cfg.d_model, cfg.d_ff, cfg.p_dtype),
+    }
+
+
+def init(key, cfg):
+    ks = jax.random.split(key, 4)
+    lkeys = jax.random.split(ks[0], cfg.n_layers)
+    blocks = jax.vmap(lambda k: {"ln": jnp.ones((cfg.d_model,), cfg.p_dtype),
+                                 "m2": m2_init(k, cfg)})(lkeys)
+    return {
+        "embed": L.embed_init(ks[1], cfg.vocab, cfg.d_model, cfg.p_dtype),
+        "layers": blocks,
+        "shared_attn": _shared_attn_init(ks[2], cfg),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.p_dtype),
+        "unembed": L.dense_init(ks[3], cfg.d_model, cfg.vocab, cfg.p_dtype),
+    }
+
+
+def param_specs(cfg):
+    block = {"ln": (None,), "m2": m2_specs(cfg)}
+    stack = jax.tree_util.tree_map(lambda s: (None, *s), block,
+                                   is_leaf=lambda s: isinstance(s, tuple))
+    shared = {"concat_proj": (None, "model"), "ln1": (None,),
+              "attn": L.attn_specs(cfg), "ln2": (None,),
+              "mlp": L.swiglu_specs()}
+    return {"embed": ("model", "data"), "layers": stack,
+            "shared_attn": shared, "final_norm": (None,),
+            "unembed": ("data", "model")}
+
+
+def n_attn_invocations(cfg) -> int:
+    return (cfg.n_layers + cfg.hybrid.attn_every - 1) // cfg.hybrid.attn_every
+
+
+def _shared_attn(sp, cfg, x, x0, positions, kv_cache=None, pos=None):
+    """Returns (y, (k, v)) — caller manages the per-invocation cache."""
+    B, S, _ = x.shape
+    h = jnp.concatenate([x, x0], axis=-1) @ sp["concat_proj"]
+    h1 = L.rms_norm(h, sp["ln1"], cfg.norm_eps)
+    q, k, v = L.project_qkv(sp["attn"], cfg, h1, positions)
+    if kv_cache is None:
+        a = L.gqa_attention(q, k, v, causal=True, q_block=cfg.q_block)
+        new_kv = (k, v)
+    else:
+        kc, vc = kv_cache
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, pos, 0, 0))
+        # causal w.r.t. absolute positions (covers both prefill S>1 and decode)
+        a = L.gqa_attention(q, kc, vc, causal=True, base_pos=pos,
+                            q_block=cfg.q_block)
+        new_kv = (kc, vc)
+    h = h + L.attn_out(sp["attn"], a, B, S)
+    h2 = L.rms_norm(h, sp["ln2"], cfg.norm_eps)
+    return h + L.swiglu(sp["mlp"], h2), new_kv
+
+
+def _stack(params, cfg, x, positions, states=None, pos=None, collect=True):
+    """Run the hybrid stack as a SCAN over attention-period groups.
+
+    One group = shared-attention invocation + ``attn_every`` Mamba-2 layers
+    (the shared block's weights are scan-invariant closures).  A tail group
+    (shared attn + L % attn_every layers) runs in python.  Scanning groups
+    instead of unrolling 38 layers keeps the HLO ~attn_every x smaller, which
+    matters for SPMD compile time at 256-512 devices.
+    """
+    ae = cfg.hybrid.attn_every
+    n_groups = cfg.n_layers // ae
+    tail = cfg.n_layers % ae
+    x0 = x
+    sp = params["shared_attn"]
+
+    def group_fwd(x, lps, kv=None):
+        """lps: params of `m` layers stacked [m, ...]; kv: cache or None."""
+        if kv is None:
+            y, new_kv = _shared_attn(sp, cfg, x, x0, positions)
+        else:
+            y, new_kv = _shared_attn(sp, cfg, x, x0, positions,
+                                     kv_cache=kv, pos=pos)
+        x = x + y
+        m = jax.tree_util.tree_leaves(lps)[0].shape[0]
+        new_ssm, new_conv = [], []
+        for j in range(m):
+            lp = jax.tree_util.tree_map(lambda a: a[j], lps)
+            h = L.rms_norm(x, lp["ln"], cfg.norm_eps)
+            if states is None:
+                y, _, _ = m2_forward(lp["m2"], cfg, h)
+            else:
+                y, s_ssm, s_conv = m2_forward(lp["m2"], cfg, h,
+                                              lp["_ssm"], lp["_conv"])
+                new_ssm.append(s_ssm)
+                new_conv.append(s_conv)
+            x = x + y
+            x = shard(x, "data", None, None)
+        if states is None:
+            return x, None, None
+        return x, new_kv, (jnp.stack(new_ssm), jnp.stack(new_conv))
+
+    def slice_group(tree, g0, g1):
+        return jax.tree_util.tree_map(lambda a: a[g0:g1], tree)
+
+    n_scan = n_groups * ae
+    head_layers = slice_group(params["layers"], 0, n_scan)
+    head_layers = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_groups, ae, *a.shape[1:]), head_layers)
+
+    if states is None:
+        f = TF._maybe_remat(lambda xx, lps: group_fwd(xx, lps)[0], cfg)
+        x, _ = jax.lax.scan(lambda c, lps: (f(c, lps), None), x, head_layers)
+        if tail:
+            x, _, _ = group_fwd(x, slice_group(params["layers"],
+                                               n_scan, cfg.n_layers))
+        return x, None
+
+    # stateful path: thread per-layer states through the scan as xs
+    def reshape_states(a):
+        return a[:n_scan].reshape(n_groups, ae, *a.shape[1:])
+
+    head = dict(head_layers)
+    head["_ssm"] = reshape_states(states["ssm"])
+    head["_conv"] = reshape_states(states["conv"])
+
+    def body(carry, xs):
+        x, = carry
+        kv = (xs.pop("_k"), xs.pop("_v"))
+        x, (nk, nv), (nssm, nconv) = group_fwd(x, xs, kv=kv)
+        return (x,), {"ssm": nssm, "conv": nconv, "k": nk, "v": nv}
+
+    head["_k"] = states["attn_k"][:n_groups]
+    head["_v"] = states["attn_v"][:n_groups]
+    (x,), outs = jax.lax.scan(body, (x,), head)
+    new_ssm = [outs["ssm"].reshape(n_scan, *outs["ssm"].shape[2:])]
+    new_conv = [outs["conv"].reshape(n_scan, *outs["conv"].shape[2:])]
+    new_k = [outs["k"]]
+    new_v = [outs["v"]]
+    if tail:
+        tl = slice_group(params["layers"], n_scan, cfg.n_layers)
+        tl = dict(tl)
+        tl["_ssm"] = states["ssm"][n_scan:]
+        tl["_conv"] = states["conv"][n_scan:]
+        kv = (states["attn_k"][n_groups], states["attn_v"][n_groups])
+        x, (nk, nv), (nssm, nconv) = group_fwd(x, tl, kv=kv)
+        new_ssm.append(nssm)
+        new_conv.append(nconv)
+        new_k.append(nk[None])
+        new_v.append(nv[None])
+    new_states = {
+        "ssm": jnp.concatenate(new_ssm), "conv": jnp.concatenate(new_conv),
+        "attn_k": jnp.concatenate(new_k), "attn_v": jnp.concatenate(new_v),
+        "pos": pos + positions.shape[-1] if pos is not None else None,
+    }
+    return x, new_states
+
+
+def loss(params, cfg, batch):
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+    x = shard(x, "data", None, None)
+    x, _ = _stack(params, cfg, x, jnp.arange(tokens.shape[1]))
+    logits = TF.logits_of(params, cfg, x)
+    labels = batch["labels"]
+    return L.softmax_xent(logits, jnp.maximum(labels, 0), mask=labels >= 0)
+
+
+def init_state(cfg, batch: int, max_len: int):
+    d_inner, H, hp, N = _m2_dims(cfg)
+    conv_dim = d_inner + 2 * N
+    ninv = n_attn_invocations(cfg)
+    K, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "ssm": jnp.zeros((cfg.n_layers, batch, H, hp, N), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm.conv_width - 1, conv_dim),
+                          cfg.act_dtype),
+        "attn_k": jnp.zeros((ninv, batch, max_len, K, hd), cfg.act_dtype),
+        "attn_v": jnp.zeros((ninv, batch, max_len, K, hd), cfg.act_dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def init_state_sealed(cfg, batch: int, max_len: int):
+    st = init_state(cfg, batch, max_len)
+    udt = cipher.uint_dtype_for(cfg.act_dtype)
+    return {
+        "ssm": jnp.zeros(st["ssm"].shape, jnp.uint32),
+        "conv": jnp.zeros(st["conv"].shape, udt),
+        "attn_k": jnp.zeros(st["attn_k"].shape, udt),
+        "attn_v": jnp.zeros(st["attn_v"].shape, udt),
+        "pos": jnp.zeros((), jnp.int32),
+        "nonce": jnp.zeros((), jnp.uint32),
+    }
+
+
+def state_specs(cfg, sealed: bool = False):
+    s = {"ssm": (None, "data", "model", None, None),
+         "conv": (None, "data", None, "model"),
+         "attn_k": (None, "data", "model", None, None),
+         "attn_v": (None, "data", "model", None, None),
+         "pos": "r"}
+    if sealed:
+        s["nonce"] = "r"
+    return s
+
+
+_SEAL_FIELDS = ("ssm", "conv", "attn_k", "attn_v")
+
+
+def _seal_states(states, key, nonce):
+    out = dict(states)
+    for i, f in enumerate(_SEAL_FIELDS):
+        out[f] = cipher.seal_bits(states[f], key, nonce * 8 + i)
+    out["nonce"] = jnp.asarray(nonce, jnp.uint32)
+    return out
+
+
+def _unseal_states(states, key, cfg):
+    n = states["nonce"]
+    dts = {"ssm": jnp.float32, "conv": cfg.act_dtype,
+           "attn_k": cfg.act_dtype, "attn_v": cfg.act_dtype}
+    out = {"pos": states["pos"]}
+    for i, f in enumerate(_SEAL_FIELDS):
+        out[f] = cipher.unseal_bits(states[f], key, n * 8 + i, dts[f])
+    # sanitize KV noise beyond pos (bit noise may decode to NaN)
+    T = out["attn_k"].shape[2]
+    tmask = (jnp.arange(T) < states["pos"])[None, None, :, None, None]
+    zero = jnp.zeros((), cfg.act_dtype)
+    out["attn_k"] = jnp.where(tmask, out["attn_k"], zero)
+    out["attn_v"] = jnp.where(tmask, out["attn_v"], zero)
+    return out
+
+
+def prefill(params, cfg, batch, max_len: int, seal_ctx=None):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+    states = init_state(cfg, B, max_len)
+    # run with live states so caches/states are produced
+    x, new_states = _stack(params, cfg, x, jnp.arange(S),
+                           states={**states, "pos": jnp.asarray(0, jnp.int32)},
+                           pos=jnp.asarray(0, jnp.int32))
+    new_states["pos"] = jnp.asarray(S, jnp.int32)
+    logits = TF.logits_of(params, cfg, x[:, -1:, :])[:, 0]
+    if seal_ctx is not None:
+        key, nonce = seal_ctx
+        new_states = _seal_states(new_states, key, nonce)
+    return logits, new_states
+
+
+def decode_step(params, cfg, states, tokens, seal_ctx=None):
+    sealed = seal_ctx is not None
+    if sealed:
+        key, _ = seal_ctx
+        nonce = states["nonce"]
+        states = _unseal_states(states, key, cfg)
+    B = tokens.shape[0]
+    pos = states["pos"]
+    x = jnp.take(params["embed"], tokens[:, None], axis=0).astype(cfg.act_dtype)
+    positions = jnp.broadcast_to(pos, (B, 1))
+    x, new_states = _stack(params, cfg, x, positions, states=states, pos=pos)
+    new_states["pos"] = pos + 1
+    logits = TF.logits_of(params, cfg, x)[:, 0]
+    if sealed:
+        new_states = _seal_states(new_states, key, nonce + jnp.uint32(1))
+    return logits, new_states

@@ -1,0 +1,350 @@
+"""Dense GQA transformer LM — qwen3 / minitron / granite / llama3 families.
+
+Also the backbone for the VLM (patch-stub frontend) and the attention blocks
+reused by MoE / encdec / zamba.  Layers are scanned with stacked params; remat
+policy is configurable.  The KV cache supports a *sealed* representation
+(ciphertext-at-rest, per paper Rules 1/2): unsealing happens per layer inside
+the layer scan so the plaintext working set is one layer's cache, which is the
+jnp-path model of the paper's "decrypt on demand at the SRAM boundary".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..core import cipher, mac
+from ..parallel.sharding import shard
+from . import layers as L
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), cfg.p_dtype),
+        "attn": L.attn_params(k1, cfg),
+        "ln2": jnp.ones((cfg.d_model,), cfg.p_dtype),
+        "mlp": L.swiglu_params(k2, cfg.d_model, cfg.d_ff, cfg.p_dtype),
+    }
+
+
+def _block_specs(cfg):
+    return {
+        "ln1": (None,), "attn": L.attn_specs(cfg),
+        "ln2": (None,), "mlp": L.swiglu_specs(),
+    }
+
+
+def init(key, cfg):
+    ks = jax.random.split(key, 4)
+    lkeys = jax.random.split(ks[0], cfg.n_layers)
+    blocks = jax.vmap(lambda k: _block_init(k, cfg))(lkeys)
+    params = {
+        "embed": L.embed_init(ks[1], cfg.vocab, cfg.d_model, cfg.p_dtype),
+        "layers": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), cfg.p_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(ks[2], cfg.d_model, cfg.vocab, cfg.p_dtype)
+    if cfg.frontend == "patch":
+        params["patch_proj"] = L.dense_init(ks[3], cfg.d_model, cfg.d_model,
+                                            cfg.p_dtype)
+    return params
+
+
+def param_specs(cfg):
+    def stack(spec_tree):  # add the layer-stack dim
+        return jax.tree_util.tree_map(
+            lambda s: (None, *s), spec_tree,
+            is_leaf=lambda s: isinstance(s, tuple))
+    block = _fsdp(_block_specs(cfg)) if cfg.fsdp else _block_specs(cfg)
+    specs = {
+        "embed": ("model", "data"),
+        "layers": stack(block),
+        "final_norm": (None,),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ("data", "model")
+    if cfg.frontend == "patch":
+        specs["patch_proj"] = (None, "model")
+    return specs
+
+
+def _fsdp(spec_tree):
+    """Add FSDP (data-axis) sharding on the first non-model dim of 2D+ params."""
+    def f(s):
+        if len(s) < 2:
+            return s
+        out = list(s)
+        for i, ax in enumerate(out):
+            if ax is None:
+                out[i] = "data"
+                break
+        return tuple(out)
+    return jax.tree_util.tree_map(f, spec_tree,
+                                  is_leaf=lambda s: isinstance(s, tuple))
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _block(lp, cfg, x, positions, kv=None, t_valid=None):
+    """One pre-norm transformer block. kv: optional (k_cache, v_cache) [B,T,K,hd]."""
+    B, S, _ = x.shape
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = L.project_qkv(lp["attn"], cfg, h, positions)
+    if kv is None:
+        a = L.gqa_attention(q, k, v, causal=True, q_block=cfg.q_block)
+    else:
+        a = L.gqa_attention(q, kv[0], kv[1], causal=False, q_block=cfg.q_block,
+                            t_valid=t_valid)
+    x = x + L.attn_out(lp["attn"], a, B, S)
+    sp = "model" if cfg.seq_parallel else None
+    x = shard(x, "data", sp, None)
+    h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = x + L.swiglu(lp["mlp"], h2)
+    return shard(x, "data", sp, None), (k, v)
+
+
+def _maybe_remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def backbone(params, cfg, x, positions, block_fn=None):
+    """Forward through the layer stack (training / prefill, no cache read)."""
+    block_fn = block_fn or _block
+    f = _maybe_remat(lambda xx, lp: block_fn(lp, cfg, xx, positions), cfg)
+
+    if cfg.scan_layers:
+        def body(carry, lp):
+            y, kv = f(carry, lp)
+            return y, kv
+        x, kvs = jax.lax.scan(body, x, params["layers"])
+        return x, kvs
+    kvs = []
+    lp_seq = [jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+              for i in range(cfg.n_layers)]
+    for lp in lp_seq:
+        x, kv = f(x, lp)
+        kvs.append(kv)
+    k = jnp.stack([kv[0] for kv in kvs])
+    v = jnp.stack([kv[1] for kv in kvs])
+    return x, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# training
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg, batch):
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+    n_front = 0
+    if cfg.frontend == "patch" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(cfg.act_dtype) @ params["patch_proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+        n_front = pe.shape[1]
+    elif cfg.frontend == "frame" and "frame_embeds" in batch:
+        fe = batch["frame_embeds"].astype(cfg.act_dtype)
+        x = jnp.concatenate([fe, x], axis=1)
+        n_front = fe.shape[1]
+    x = shard(x, "data", None, None)
+    return x, n_front
+
+
+def logits_of(params, cfg, x):
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = x @ w
+    return shard(logits, "data", None, "model")
+
+
+def loss(params, cfg, batch):
+    """Next-token CE. batch: tokens [B,S], labels [B,S] (-1 = masked)."""
+    x, n_front = _embed_inputs(params, cfg, batch)
+    positions = jnp.arange(x.shape[1])
+    x, _ = backbone(params, cfg, x, positions)
+    if n_front:
+        x = x[:, n_front:]
+    logits = logits_of(params, cfg, x)
+    labels = batch["labels"]
+    return L.softmax_xent(logits, jnp.maximum(labels, 0), mask=labels >= 0)
+
+
+# ---------------------------------------------------------------------------
+# serving: KV cache (plain or sealed), prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, sealed: bool = False,
+               n_layers: int | None = None):
+    nl = n_layers if n_layers is not None else cfg.n_layers
+    K, hd = cfg.n_kv_heads, cfg.hd
+    shape = (nl, batch, max_len, K, hd)
+    dt = cfg.act_dtype
+    cache = {"pos": jnp.zeros((), jnp.int32)}
+    if sealed:
+        udt = cipher.uint_dtype_for(dt)
+        cache["k_ct"] = jnp.zeros(shape, udt)
+        cache["v_ct"] = jnp.zeros(shape, udt)
+        cache["nonce"] = jnp.zeros((), jnp.uint32)
+    else:
+        cache["k"] = jnp.zeros(shape, dt)
+        cache["v"] = jnp.zeros(shape, dt)
+    return cache
+
+
+def cache_specs(cfg, sealed: bool = False):
+    """Logical shardings for the cache: batch over data, seq over model.
+
+    Sequence-dim sharding works for every assigned arch (all cache lengths are
+    multiples of 256) regardless of kv-head count; see DESIGN.md.
+    """
+    kv = (None, "data", "model", None, None)
+    out = {"pos": "r"}
+    if sealed:
+        out.update({"k_ct": kv, "v_ct": kv, "nonce": "r"})
+    else:
+        out.update({"k": kv, "v": kv})
+    return out
+
+
+def _layer_nonce(nonce, layer_idx):
+    """Per-(cache epoch, layer) nonce; k uses 2*sub, v uses 2*sub+1."""
+    return nonce * jnp.uint32(2 * 65536) + jnp.asarray(layer_idx, jnp.uint32)
+
+
+def prefill(params, cfg, batch, max_len: int, seal_ctx=None):
+    """Run the full prompt; return (last-token logits, cache at ``max_len``)."""
+    x, n_front = _embed_inputs(params, cfg, batch)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S)
+    x, (ks, vs) = backbone(params, cfg, x, positions)
+    pad = max_len - S
+    ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"pos": jnp.asarray(S, jnp.int32)}
+    if seal_ctx is not None:
+        key, nonce = seal_ctx
+        lids = jnp.arange(cfg.n_layers, dtype=jnp.uint32)
+        def seal_layer(l, kk, vv):
+            sub = _layer_nonce(nonce, l)
+            return (cipher.seal_bits(kk, key, sub * 2),
+                    cipher.seal_bits(vv, key, sub * 2 + 1))
+        k_ct, v_ct = jax.vmap(seal_layer)(lids, ks, vs)
+        cache.update({"k_ct": k_ct, "v_ct": v_ct, "nonce": jnp.asarray(nonce, jnp.uint32)})
+    else:
+        cache.update({"k": ks, "v": vs})
+    logits = logits_of(params, cfg, x[:, -1:, :])
+    return logits[:, 0], cache
+
+
+def decode_step(params, cfg, cache, tokens, seal_ctx=None):
+    """One decode step. tokens: [B] int32. Returns (logits [B,V], new cache)."""
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tokens[:, None], axis=0).astype(cfg.act_dtype)
+    positions = jnp.broadcast_to(pos, (B, 1))
+    sealed = seal_ctx is not None
+    key, nonce = seal_ctx if sealed else (None, None)
+
+    def block_with_cache(carry, xs):
+        x, = carry
+        fused = sealed and cfg.fused_sealed_attention
+        if sealed:
+            lp, kc, vc, lid = xs
+            sub = _layer_nonce(cache["nonce"], lid)
+            T, K = kc.shape[1], kc.shape[2]
+            if not fused:
+                kcache = cipher.unseal_bits(kc, key, sub * 2, cfg.act_dtype)
+                vcache = cipher.unseal_bits(vc, key, sub * 2 + 1, cfg.act_dtype)
+                # sanitize slots beyond the valid length: their "plaintext" is
+                # keystream noise (possibly NaN bits) and 0*NaN would poison
+                # the masked softmax-V product.
+                tmask = (jnp.arange(T) < pos)[None, :, None, None]
+                kcache = jnp.where(tmask, kcache, jnp.zeros((), cfg.act_dtype))
+                vcache = jnp.where(tmask, vcache, jnp.zeros((), cfg.act_dtype))
+        else:
+            lp, kcache, vcache, lid = xs
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.project_qkv(lp["attn"], cfg, h, positions)
+
+        if fused:
+            assert cfg.act_dtype == jnp.bfloat16, \
+                "fused_sealed_attention requires bf16 activations"
+            # fused path: write ONLY the new slot's ciphertext, then
+            # flash-decode directly over the sealed cache — the keystream is
+            # regenerated in VMEM; the decrypted cache never touches HBM.
+            rows = ((jnp.arange(B, dtype=jnp.uint32)[:, None, None]
+                     * jnp.uint32(T) + pos.astype(jnp.uint32)) * jnp.uint32(K)
+                    + jnp.arange(K, dtype=jnp.uint32)[None, None, :])
+            kc2 = jax.lax.dynamic_update_slice(
+                kc, cipher.seal_bits_slice(k, key, sub * 2, rows),
+                (0, pos, 0, 0))
+            vc2 = jax.lax.dynamic_update_slice(
+                vc, cipher.seal_bits_slice(v, key, sub * 2 + 1, rows),
+                (0, pos, 0, 0))
+            from ..kernels.sealed_attention.kernel import \
+                sealed_decode_attention
+            G = cfg.n_heads // K
+            qk = q.reshape(B, K, G, cfg.hd).astype(jnp.bfloat16)
+            ztags = jnp.zeros((B, T, K, 1), jnp.uint32)
+            kkey = cipher.derive_tensor_key(key, sub * 2)
+            vkey = cipher.derive_tensor_key(key, sub * 2 + 1)
+            mk = jnp.zeros((max(cfg.hd // 2, 1),), jnp.uint32)
+            a4, _ = sealed_decode_attention(
+                qk, kc2, vc2, ztags, ztags, kkey, vkey, mk, pos + 1,
+                bt=min(512, T), verify=False,
+                interpret=(jax.default_backend() != "tpu"))
+            a = a4.reshape(B, 1, K * G, cfg.hd).astype(cfg.act_dtype)
+            new_caches = (kc2, vc2)
+        else:
+            kcache = jax.lax.dynamic_update_slice(kcache, k, (0, pos, 0, 0))
+            vcache = jax.lax.dynamic_update_slice(vcache, v, (0, pos, 0, 0))
+            a = L.gqa_attention(q, kcache, vcache, causal=False,
+                                t_valid=pos + 1)
+            if sealed:
+                # write back ONLY the new slot's ciphertext (cost ~ bytes
+                # written, paper §3.4); untouched slots keep their ciphertext.
+                rows = ((jnp.arange(B, dtype=jnp.uint32)[:, None, None]
+                         * jnp.uint32(T) + pos.astype(jnp.uint32))
+                        * jnp.uint32(K)
+                        + jnp.arange(K, dtype=jnp.uint32)[None, None, :])
+                kc2 = jax.lax.dynamic_update_slice(
+                    kc, cipher.seal_bits_slice(k, key, sub * 2, rows),
+                    (0, pos, 0, 0))
+                vc2 = jax.lax.dynamic_update_slice(
+                    vc, cipher.seal_bits_slice(v, key, sub * 2 + 1, rows),
+                    (0, pos, 0, 0))
+                new_caches = (kc2, vc2)
+            else:
+                new_caches = (kcache, vcache)
+        x = x + L.attn_out(lp["attn"], a, B, 1)
+        h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + L.swiglu(lp["mlp"], h2)
+        return (x,), new_caches
+
+    lids = jnp.arange(cfg.n_layers, dtype=jnp.uint32)
+    if sealed:
+        xs = (params["layers"], cache["k_ct"], cache["v_ct"], lids)
+    else:
+        xs = (params["layers"], cache["k"], cache["v"], lids)
+    (x,), (nk, nv) = jax.lax.scan(block_with_cache, (x,), xs)
+    logits = logits_of(params, cfg, x)[:, 0]
+    new_cache = dict(cache)
+    new_cache["pos"] = pos + 1
+    if sealed:
+        new_cache.update({"k_ct": nk, "v_ct": nv})
+    else:
+        new_cache.update({"k": nk, "v": nv})
+    return logits, new_cache

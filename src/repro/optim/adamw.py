@@ -1,0 +1,87 @@
+"""AdamW with dtype-configurable moment states.
+
+Moments may be kept in bf16 (llama3-405b on 256 chips needs it to fit HBM;
+see DESIGN.md) — update math always runs in f32 and re-rounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    step: jax.Array
+    params: Any
+    mu: Any
+    nu: Any
+
+    def tree_flatten(self):
+        return (self.step, self.params, self.mu, self.nu), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale
+                                             ).astype(g.dtype), grads), gn
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Any = 3e-4                 # float or schedule fn(step) -> float
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"   # moment dtype ("bfloat16" to halve HBM)
+
+    def init(self, params) -> TrainState:
+        dt = jnp.dtype(self.state_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                          mu=jax.tree_util.tree_map(zeros, params),
+                          nu=jax.tree_util.tree_map(zeros, params))
+
+    def apply(self, state: TrainState, grads) -> tuple[TrainState, dict]:
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        if self.grad_clip:
+            grads, gnorm = clip_by_global_norm(grads, self.grad_clip)
+        else:
+            _, gnorm = clip_by_global_norm(grads, jnp.inf)
+        b1, b2 = self.b1, self.b2
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+        dt = jnp.dtype(self.state_dtype)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            mf = m.astype(jnp.float32) * b1 + gf * (1 - b1)
+            vf = v.astype(jnp.float32) * b2 + jnp.square(gf) * (1 - b2)
+            u = (mf / c1) / (jnp.sqrt(vf / c2) + self.eps)
+            pf = p.astype(jnp.float32)
+            if p.ndim >= 2:  # decay matrices only (norms/scales exempt)
+                u = u + self.weight_decay * pf
+            return ((pf - lr * u).astype(p.dtype), mf.astype(dt), vf.astype(dt))
+
+        out = jax.tree_util.tree_map(upd, state.params, grads, state.mu, state.nu)
+        new_p = jax.tree_util.tree_map(lambda o: o[0], out,
+                                       is_leaf=lambda o: isinstance(o, tuple))
+        new_m = jax.tree_util.tree_map(lambda o: o[1], out,
+                                       is_leaf=lambda o: isinstance(o, tuple))
+        new_v = jax.tree_util.tree_map(lambda o: o[2], out,
+                                       is_leaf=lambda o: isinstance(o, tuple))
+        return (TrainState(step=step, params=new_p, mu=new_m, nu=new_v),
+                {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)})

@@ -1,0 +1,2 @@
+from . import collectives, compress, sharding  # noqa: F401
+from . import pipeline  # noqa: F401

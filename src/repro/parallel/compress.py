@@ -1,0 +1,41 @@
+"""Gradient compression for the cross-pod (DCN) hop.
+
+Block-scaled int8 quantization: deterministic round-to-nearest with a per-block
+f32 scale (block = trailing 256 elements).  Composes with sealing: the int8
+payload + scales are what gets encrypted and shipped across the pod boundary —
+4x fewer sealed bytes AND 4x fewer DCN bytes, attacking both the collective
+term and the crypto term of the roofline at once (the paper's §3.4: crypto
+cost rides on bytes moved).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def quantize_int8(x: jax.Array):
+    """x: float array -> (q int8 same shape, scale f32 [..., n_blocks])."""
+    orig_shape = x.shape
+    n = x.size
+    xf = x.astype(jnp.float32).reshape(-1)
+    pad = (-n) % BLOCK
+    if pad:
+        xf = jnp.concatenate([xf, jnp.zeros((pad,), jnp.float32)])
+    xb = xf.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(-1)[:n].reshape(orig_shape), scale[:, 0]
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    orig_shape = q.shape
+    n = q.size
+    qf = q.astype(jnp.float32).reshape(-1)
+    pad = (-n) % BLOCK
+    if pad:
+        qf = jnp.concatenate([qf, jnp.zeros((pad,), jnp.float32)])
+    x = (qf.reshape(-1, BLOCK) * scale[:, None]).reshape(-1)[:n]
+    return x.reshape(orig_shape).astype(dtype)

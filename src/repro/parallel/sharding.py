@@ -1,0 +1,143 @@
+"""Sharding context + logical-axis annotation helpers.
+
+Model code annotates activations with *logical* axes via ``shard(x, 'data',
+None, 'model')``; the active ShardingCtx maps 'data' to the physical data axes
+(('pod', 'data') on the multi-pod mesh, ('data',) on one pod) and 'model' to
+the tensor-parallel axis.  With no active context every helper is a no-op, so
+the same model code runs single-device (smoke tests) and under pjit (dry-run,
+production) unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE: Optional["ShardingCtx"] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    mesh: Mesh
+    data_axes: tuple          # e.g. ('pod', 'data') or ('data',)
+    model_axis: str = "model"
+
+    def resolve(self, logical) -> object:
+        """Map one logical spec element to mesh axis name(s)."""
+        if logical is None:
+            return None
+        if logical == "data":
+            return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+        if logical == "model":
+            return self.model_axis
+        if logical == "pod":
+            return "pod" if "pod" in self.mesh.axis_names else None
+        if isinstance(logical, (tuple, list)):
+            parts = []
+            for item in logical:
+                r = self.resolve(item)
+                if r is None:
+                    continue
+                parts.extend(r if isinstance(r, tuple) else (r,))
+            return tuple(parts) if parts else None
+        return logical
+
+    def pspec(self, *logical) -> P:
+        return P(*(self.resolve(ax) for ax in logical))
+
+    def named(self, *logical) -> NamedSharding:
+        return NamedSharding(self.mesh, self.pspec(*logical))
+
+
+def active() -> Optional[ShardingCtx]:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def use(ctx: Optional[ShardingCtx]):
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = ctx
+    try:
+        yield ctx
+    finally:
+        _ACTIVE = prev
+
+
+def make_ctx(mesh: Mesh, manual_axes: tuple = ()) -> ShardingCtx:
+    """manual_axes: axes handled manually by an enclosing shard_map (e.g.
+    ('pod',) in hierarchical sealed-collective mode) — excluded from 'data'."""
+    names = mesh.axis_names
+    data_axes = tuple(a for a in ("pod", "data")
+                      if a in names and a not in manual_axes)
+    return ShardingCtx(mesh=mesh, data_axes=data_axes or ("data",))
+
+
+def shard(x: jax.Array, *logical) -> jax.Array:
+    """Constrain an activation's sharding (no-op without an active context).
+
+    Axes that don't divide the dimension are dropped (shape-aware), so model
+    code can annotate unconditionally.
+    """
+    ctx = _ACTIVE
+    if ctx is None:
+        return x
+    spec = fit_pspec(ctx, logical, x.shape)
+    try:
+        manual = jax.sharding.get_abstract_mesh().manual_axes
+    except Exception:
+        manual = ()
+    if manual:
+        # inside a partial-manual shard_map: strip manual axes and bind the
+        # spec to the ambient abstract mesh
+        def strip(el):
+            if el is None:
+                return None
+            if isinstance(el, tuple):
+                kept = tuple(a for a in el if a not in manual)
+                return kept or None
+            return None if el in manual else el
+        return jax.lax.with_sharding_constraint(
+            x, P(*(strip(e) for e in spec)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def axes_size(mesh: Mesh, resolved) -> int:
+    if resolved is None:
+        return 1
+    if isinstance(resolved, str):
+        return mesh.shape[resolved]
+    return int(__import__("math").prod(mesh.shape[a] for a in resolved))
+
+
+def fit_pspec(ctx: ShardingCtx, logical, shape) -> P:
+    """Resolve logical axes and DROP any whose shard count does not divide
+    the dimension (jax requires divisibility for arg shardings).  Extra
+    trailing logical axes beyond ndim are dropped too."""
+    elems = []
+    for d in range(len(shape)):
+        lg = logical[d] if d < len(logical) else None
+        r = ctx.resolve(lg)
+        if r is not None and shape[d] % axes_size(ctx.mesh, r) != 0:
+            r = None
+        elems.append(r)
+    return P(*elems)
+
+
+def is_spec_leaf(s) -> bool:
+    """Logical-spec leaves: a tuple of axis names, or 'r' (replicated)."""
+    return isinstance(s, tuple) or (isinstance(s, str) and s == "r")
+
+
+def tree_named_shardings(spec_tree, mesh: Mesh):
+    """Convert a pytree of logical-spec tuples (or 'r') to NamedShardings."""
+    ctx = make_ctx(mesh)
+    def conv(spec):
+        if spec == "r" or spec is None:
+            return NamedSharding(mesh, P())
+        return ctx.named(*spec)
+    return jax.tree_util.tree_map(
+        conv, spec_tree, is_leaf=lambda s: s is None or is_spec_leaf(s))

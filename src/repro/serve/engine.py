@@ -1,0 +1,86 @@
+"""Batched serving engine with a sealed KV cache.
+
+The engine is the host-program role of the paper: it holds the session key,
+keeps model weights and the KV cache sealed in (untrusted) HBM, and launches
+jitted prefill / decode steps that unseal on demand in-graph.  Each launch
+goes through the SecureChannel's register-protection path (Rule 3) so an
+untrusted driver cannot tamper with or replay launch descriptors.
+
+Batching: fixed-slot batches of equal-length prompts (left-trim/pad by the
+caller).  Greedy sampling; the decode loop is a host loop over a single
+jitted step, as production engines do.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import sealed as sealed_lib
+from ..core.channel import SecureChannel
+from ..models import registry
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    cfg: object
+    params: object                  # sealed tree if channel.config.enabled
+    channel: SecureChannel
+    max_len: int
+
+    def __post_init__(self):
+        self.model = registry.get_model(self.cfg)
+        self._sealed = self.channel.config.enabled
+        self._nonce_epoch = 1
+        self._prefill = jax.jit(partial(self._prefill_impl))
+        self._decode = jax.jit(partial(self._decode_impl))
+
+    # -- jitted bodies ---------------------------------------------------
+    def _unsealed_params(self):
+        if not self._sealed:
+            return self.params, jnp.bool_(True)
+        return sealed_lib.unseal_tree(self.params, self.channel.jkey)
+
+    def _prefill_impl(self, params_in, batch, nonce):
+        params, ok = (sealed_lib.unseal_tree(params_in, self.channel.jkey)
+                      if self._sealed else (params_in, jnp.bool_(True)))
+        seal_ctx = (self.channel.jkey, nonce) if self._sealed else None
+        logits, cache = self.model.prefill(params, self.cfg, batch,
+                                           self.max_len, seal_ctx=seal_ctx)
+        logits = jnp.where(ok, logits, jnp.nan)
+        return logits, cache
+
+    def _decode_impl(self, params_in, cache, tokens):
+        params, ok = (sealed_lib.unseal_tree(params_in, self.channel.jkey)
+                      if self._sealed else (params_in, jnp.bool_(True)))
+        seal_ctx = ((self.channel.jkey, cache.get("nonce"))
+                    if self._sealed else None)
+        logits, cache = self.model.decode_step(params, self.cfg, cache, tokens,
+                                               seal_ctx=seal_ctx)
+        logits = jnp.where(ok, logits, jnp.nan)
+        return logits, cache
+
+    # -- public API --------------------------------------------------------
+    def generate(self, batch: dict, n_new: int, log=None):
+        """batch: {'tokens': [B, S] int32, ...frontends}. Greedy decode."""
+        nonce = jnp.asarray(self._nonce_epoch, jnp.uint32)
+        self._nonce_epoch += 1 + n_new
+        self.channel.launch(lambda: None, {
+            "op": "prefill", "arch": self.cfg.arch_id,
+            "shape": {k: list(v.shape) for k, v in batch.items()},
+            "max_len": self.max_len})
+        logits, cache = self._prefill(self.params, batch, nonce)
+        out = []
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(np.asarray(tok))
+        for i in range(n_new - 1):
+            self.channel.launch(lambda: None, {
+                "op": "decode", "arch": self.cfg.arch_id, "step": i})
+            logits, cache = self._decode(self.params, cache, tok)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(np.asarray(tok))
+        return np.stack(out, axis=1)  # [B, n_new]

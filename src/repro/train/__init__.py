@@ -1,0 +1,2 @@
+from .trainer import make_train_step, seal_state, unseal_state_host  # noqa: F401
+from . import checkpoint, fault  # noqa: F401

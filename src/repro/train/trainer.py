@@ -1,0 +1,136 @@
+"""Training step builder — the paper's secure-offload loop as a jitted step.
+
+One ``train_step`` is one accelerator "launch" in the paper's terms:
+  1. Sealed state (params + Adam moments) sits in untrusted HBM as ciphertext.
+  2. The step unseals in-graph (decrypt + MAC verify = the security interface's
+     on-demand fetch path), runs forward/backward over ``n_accum`` scanned
+     microbatches, applies AdamW, and re-seals with bumped nonces (freshness).
+  3. All outputs are gated on the MAC verification predicate: a tampered
+     ciphertext yields poisoned (NaN) outputs, never silent computation.
+
+The batch may itself arrive sealed (Rule 1 ingestion); gradient cross-pod
+reduction goes through ``parallel.collectives`` which seals payloads crossing
+the pod trust boundary.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..core import sealed as sealed_lib
+from ..core.channel import poison_unless
+from ..core.policy import SecurityConfig
+from ..optim import AdamW, TrainState
+
+
+def seal_state(state: TrainState, key, sec: SecurityConfig) -> TrainState:
+    """Seal a TrainState's tensors for HBM residency (host-side, once)."""
+    if not sec.enabled:
+        return state
+    return TrainState(
+        step=state.step,
+        params=sealed_lib.seal_tree(state.params, key, sec.weights, 1 << 8),
+        mu=sealed_lib.seal_tree(state.mu, key, sec.grads, 1 << 16),
+        nu=sealed_lib.seal_tree(state.nu, key, sec.grads, 1 << 17),
+    )
+
+
+def unseal_state_host(state: TrainState, key, sec: SecurityConfig) -> TrainState:
+    """Host-side unseal (e.g. for export); raises on MAC failure."""
+    if not sec.enabled:
+        return state
+    params, ok1 = sealed_lib.unseal_tree(state.params, key)
+    mu, ok2 = sealed_lib.unseal_tree(state.mu, key)
+    nu, ok3 = sealed_lib.unseal_tree(state.nu, key)
+    if not bool(ok1 & ok2 & ok3):
+        raise RuntimeError("sealed train state failed integrity verification")
+    return TrainState(step=state.step, params=params, mu=mu, nu=nu)
+
+
+def make_train_step(model, cfg, opt: AdamW, sec: SecurityConfig,
+                    key=None, grad_hook: Callable | None = None,
+                    acc_dtype: str = "float32"):
+    """Build the jitted-able train step.
+
+    model: family module (loss(params, cfg, batch));  opt: AdamW;
+    sec: SecurityConfig; key: uint32[2] cipher key (required if sec.enabled);
+    grad_hook: optional fn(grads, step) -> grads (cross-pod sealed reduction,
+    compression) applied after accumulation.
+    """
+    sealed_mode = sec.enabled
+    if sealed_mode:
+        assert key is not None
+
+    def loss_fn(params, mb):
+        if sealed_mode and isinstance(next(iter(mb.values())), sealed_lib.SealedTensor):
+            mb, ok = sealed_lib.unseal_tree(mb, key)
+        return model.loss(params, cfg, mb)
+
+    def train_step(state: TrainState, batch_stack):
+        """batch_stack: leaves [n_accum, B, ...]."""
+        ok = jnp.bool_(True)
+        if sealed_mode:
+            params, ok_p = sealed_lib.unseal_tree(state.params, key)
+            mu, ok_m = sealed_lib.unseal_tree(state.mu, key)
+            nu, ok_n = sealed_lib.unseal_tree(state.nu, key)
+            ok = ok_p & ok_m & ok_n
+        else:
+            params, mu, nu = state.params, state.mu, state.nu
+
+        acc_dt = jnp.dtype(acc_dtype)
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, acc_dt), params)
+
+        def micro(carry, mb):
+            g_acc, l_acc = carry
+            l, g = jax.value_and_grad(lambda p: loss_fn(p, mb))(params)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(acc_dt), g_acc, g)
+            return (g_acc, l_acc + l), None
+
+        n_accum = jax.tree_util.tree_leaves(batch_stack)[0].shape[0]
+        (g_sum, l_sum), _ = jax.lax.scan(micro, (zeros, jnp.zeros(())),
+                                         batch_stack)
+        grads = jax.tree_util.tree_map(
+            lambda g: (g.astype(jnp.float32) / n_accum), g_sum)
+        loss = l_sum / n_accum
+        if grad_hook is not None:
+            grads = grad_hook(grads, state.step)
+        grads = jax.tree_util.tree_map(lambda g, p: g.astype(p.dtype),
+                                       grads, params)
+
+        plain = TrainState(step=state.step, params=params, mu=mu, nu=nu)
+        new_plain, metrics = opt.apply(plain, grads)
+        metrics["loss"] = loss
+        metrics["seal_ok"] = ok
+
+        if sealed_mode:
+            # gate on verification: tampered inputs poison everything written
+            gated = poison_unless(ok, (new_plain.params, new_plain.mu,
+                                       new_plain.nu))
+            new_state = TrainState(
+                step=new_plain.step,
+                params=sealed_lib.reseal_tree(state.params, gated[0], key),
+                mu=sealed_lib.reseal_tree(state.mu, gated[1], key),
+                nu=sealed_lib.reseal_tree(state.nu, gated[2], key),
+            )
+        else:
+            new_state = new_plain
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model, cfg, sec: SecurityConfig, key=None):
+    sealed_mode = sec.enabled
+
+    def eval_step(state: TrainState, batch):
+        params = state.params
+        if sealed_mode:
+            params, _ = sealed_lib.unseal_tree(params, key)
+        return model.loss(params, cfg, batch)
+
+    return eval_step

@@ -1,0 +1,14 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jnp.array([0x12345678, 0x9ABCDEF0], dtype=jnp.uint32)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)

@@ -1,0 +1,58 @@
+"""Costing-model sanity: analytic param counts vs eval_shape ground truth,
+roofline-term invariants, security-level ordering."""
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
+import costing  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.models import registry  # noqa: E402
+from repro.models.config import SHAPES_BY_NAME  # noqa: E402
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_param_count_matches_eval_shape(arch):
+    cfg = configs.get_config(arch)
+    m = registry.get_model(cfg)
+    tree = jax.eval_shape(lambda: m.init(jax.random.PRNGKey(0), cfg))
+    true_n = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+    model_n = costing.param_count(cfg)
+    assert abs(model_n - true_n) / true_n < 0.03, (arch, model_n, true_n)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "moonshot-v1-16b-a3b",
+                                  "rwkv6-3b"])
+@pytest.mark.parametrize("shape", ["train_4k", "prefill_32k", "decode_32k"])
+def test_security_levels_order_costs(arch, shape):
+    """trusted >= ctr >= off in both flops and bytes (paper's columns)."""
+    cfg = configs.get_config(arch)
+    sh = SHAPES_BY_NAME[shape]
+    costs = {lvl: costing.cost_cell(cfg, sh, security=lvl, microbatch=16)
+             for lvl in ("off", "ctr", "trusted")}
+    assert costs["trusted"].flops >= costs["ctr"].flops >= costs["off"].flops
+    assert costs["trusted"].hbm_bytes >= costs["off"].hbm_bytes
+    assert costs["off"].crypto_flops == 0
+
+
+def test_fused_crypto_reduces_memory_not_flops():
+    cfg = configs.get_config("qwen3-4b")
+    sh = SHAPES_BY_NAME["decode_32k"]
+    unfused = costing.cost_cell(cfg, sh, security="trusted")
+    fused = costing.cost_cell(cfg, sh, security="trusted", fused_crypto=True)
+    assert fused.hbm_bytes < unfused.hbm_bytes * 0.6
+    assert fused.flops == unfused.flops
+
+
+def test_roofline_terms_structure():
+    cfg = configs.get_config("granite-3-2b")
+    c = costing.cost_cell(cfg, SHAPES_BY_NAME["train_4k"], microbatch=16)
+    t = costing.roofline_terms(c, collective_link_bytes=1e9)
+    assert set(t) >= {"t_compute", "t_memory", "t_collective", "dominant",
+                      "useful_fraction", "roofline_fraction"}
+    assert 0 < t["roofline_fraction"] <= 1.0
+    assert 0 < t["useful_fraction"] <= 1.0

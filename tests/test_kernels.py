@@ -1,0 +1,113 @@
+"""Per-kernel interpret-mode vs pure-jnp-oracle checks with shape sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cipher
+from repro.kernels.ctr_cipher import ops as ctr_ops
+from repro.kernels.sealed_attention import ops as sa_ops
+from repro.kernels.sealed_matmul import ops as smm_ops
+from repro.kernels.tree_mac import ops as mac_ops
+
+
+@pytest.mark.parametrize("shape", [(256, 256), (512, 512), (256, 768),
+                                   (300, 200)])
+def test_ctr_kernel_vs_ref(key, shape):
+    x = jax.random.bits(jax.random.PRNGKey(0), shape, jnp.uint32)
+    ref = ctr_ops.ctr_xor(x, key, backend="jnp")
+    out = ctr_ops.ctr_xor(x, key, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+    # involutive
+    back = ctr_ops.ctr_xor(out, key, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+def test_ctr_kernel_matches_core_seal(key):
+    x = jax.random.normal(jax.random.PRNGKey(1), (256, 256), jnp.float32)
+    tkey = cipher.derive_tensor_key(key, jnp.uint32(5))
+    ct_core = cipher.seal_bits(x, key, 5)
+    ct_kern = ctr_ops.ctr_xor(jax.lax.bitcast_convert_type(x, jnp.uint32),
+                              tkey, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(ct_core), np.asarray(ct_kern))
+
+
+@pytest.mark.parametrize("cw", [64, 128, 256])
+@pytest.mark.parametrize("shape", [(256, 512), (512, 1024)])
+def test_tree_mac_kernel_vs_ref(key, cw, shape):
+    x = jax.random.bits(jax.random.PRNGKey(2), shape, jnp.uint32)
+    ref = mac_ops.mac_tags(x, key, cw, backend="jnp")
+    out = mac_ops.mac_tags(x, key, cw, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+
+@pytest.mark.parametrize("mkn", [(256, 512, 256), (256, 256, 256)])
+def test_sealed_matmul_vs_ref_and_plain(key, mkn):
+    M, K, N = mkn
+    bm = bk = bn = 256
+    a = jax.random.normal(jax.random.PRNGKey(3), (M, K), jnp.bfloat16)
+    b = jax.random.normal(jax.random.PRNGKey(4), (K, N), jnp.bfloat16)
+    na, nb = jnp.uint32(10), jnp.uint32(11)
+    cw = bk // 2
+    a_ct, tags_a = smm_ops.seal_operand(a, key, na, cw, mac_nonce=na)
+    b_ct, tags_b = smm_ops.seal_operand(b, key, nb, cw, mac_nonce=na)
+    c_ref, bad_ref = smm_ops.matmul(a_ct, b_ct, tags_a, tags_b, key, na, nb,
+                                    bm=bm, bk=bk, bn=bn, backend="jnp")
+    c_int, bad_int = smm_ops.matmul(a_ct, b_ct, tags_a, tags_b, key, na, nb,
+                                    bm=bm, bk=bk, bn=bn, backend="interpret")
+    want = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    assert int(bad_ref) == 0 and int(bad_int) == 0
+    np.testing.assert_allclose(np.asarray(c_ref, np.float32),
+                               np.asarray(want, np.float32), rtol=1e-2,
+                               atol=1e-2)
+    np.testing.assert_allclose(np.asarray(c_int, np.float32),
+                               np.asarray(c_ref, np.float32), rtol=3e-2,
+                               atol=5e-2)
+
+
+def test_sealed_matmul_tamper_bit(key):
+    M = K = N = 256
+    a = jax.random.normal(jax.random.PRNGKey(5), (M, K), jnp.bfloat16)
+    b = jax.random.normal(jax.random.PRNGKey(6), (K, N), jnp.bfloat16)
+    na, nb = jnp.uint32(1), jnp.uint32(2)
+    a_ct, ta = smm_ops.seal_operand(a, key, na, 128, mac_nonce=na)
+    b_ct, tb = smm_ops.seal_operand(b, key, nb, 128, mac_nonce=na)
+    bad_a = a_ct.at[17, 93].add(1)
+    _, bad = smm_ops.matmul(bad_a, b_ct, ta, tb, key, na, nb,
+                            backend="interpret")
+    assert int(bad) == 1
+
+
+@pytest.mark.parametrize("tv", [1, 500, 1024])
+def test_sealed_attention_vs_ref(key, tv):
+    B, T, K, G, hd = 1, 1024, 2, 2, 128
+    q = jax.random.normal(jax.random.PRNGKey(7), (B, K, G, hd), jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(8), (B, T, K, hd), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(9), (B, T, K, hd), jnp.bfloat16)
+    nk, nv = jnp.uint32(3), jnp.uint32(4)
+    kc, vc, kt, vt = sa_ops.seal_cache(k, v, key, nk, nv)
+    o_ref, b_ref = sa_ops.decode_attention(q, kc, vc, kt, vt, key, nk, nv, tv,
+                                           backend="jnp")
+    o_int, b_int = sa_ops.decode_attention(q, kc, vc, kt, vt, key, nk, nv, tv,
+                                           bt=256, backend="interpret")
+    assert int(b_ref.sum()) == 0 and int(b_int.sum()) == 0
+    np.testing.assert_allclose(np.asarray(o_ref, np.float32),
+                               np.asarray(o_int, np.float32), atol=3e-2)
+
+
+def test_sealed_attention_tamper_only_valid_region(key):
+    B, T, K, G, hd = 1, 512, 1, 2, 64
+    q = jax.random.normal(jax.random.PRNGKey(10), (B, K, G, hd), jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(11), (B, T, K, hd), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(12), (B, T, K, hd), jnp.bfloat16)
+    kc, vc, kt, vt = sa_ops.seal_cache(k, v, key, jnp.uint32(1), jnp.uint32(2))
+    tv = 300
+    bad = kc.at[0, 100, 0, 5].add(1)
+    _, b1 = sa_ops.decode_attention(q, bad, vc, kt, vt, key, jnp.uint32(1),
+                                    jnp.uint32(2), tv, bt=128,
+                                    backend="interpret")
+    bad2 = kc.at[0, 400, 0, 5].add(1)  # beyond t_valid: never fetched/used
+    _, b2 = sa_ops.decode_attention(q, bad2, vc, kt, vt, key, jnp.uint32(1),
+                                    jnp.uint32(2), tv, bt=128,
+                                    backend="interpret")
+    assert int(b1.sum()) == 1 and int(b2.sum()) == 0

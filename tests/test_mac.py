@@ -1,0 +1,77 @@
+"""Mersenne-31 multilinear tree MAC: field math, tamper/position detection."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mac
+
+P = 2**31 - 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(a=st.integers(0, 2**32 - 1), b=st.integers(0, 2**32 - 1))
+def test_mulmod_matches_bigint(a, b):
+    got = int(mac.canon(mac.mulmod(jnp.uint32(a), jnp.uint32(b))))
+    aa = (a >> 31) + (a & P)
+    bb = (b >> 31) + (b & P)
+    assert got == (aa * bb) % P
+
+
+@settings(max_examples=50, deadline=None)
+@given(a=st.integers(0, 2**32 - 1), b=st.integers(0, 2**32 - 1))
+def test_addmod_matches_bigint(a, b):
+    got = int(mac.canon(mac.addmod(jnp.uint32(a), jnp.uint32(b))))
+    aa = (a >> 31) + (a & P)
+    bb = (b >> 31) + (b & P)
+    assert got == (aa + bb) % P
+
+
+def test_block_tags_shape_and_verify(key):
+    ct = jax.random.bits(jax.random.PRNGKey(1), (8, 1024), jnp.uint32)
+    tags = mac.block_tags(ct, key, 256)
+    assert tags.shape == (8, 4)
+    assert bool(mac.verify_block_tags(ct, key, 256, tags).all())
+
+
+@pytest.mark.parametrize("pos", [(0, 0), (3, 700), (7, 1023)])
+def test_single_bit_tamper_detected(key, pos):
+    ct = jax.random.bits(jax.random.PRNGKey(2), (8, 1024), jnp.uint32)
+    tags = mac.block_tags(ct, key, 256)
+    bad = ct.at[pos].add(1)
+    v = mac.verify_block_tags(bad, key, 256, tags)
+    assert not bool(v.all())
+    # only the touched chunk fails
+    assert int((~v).sum()) == 1
+
+
+def test_identical_chunks_get_distinct_tags(key):
+    ct = jnp.tile(jax.random.bits(jax.random.PRNGKey(3), (1, 256), jnp.uint32),
+                  (8, 4))
+    tags = np.asarray(mac.block_tags(ct, key, 256))
+    assert len(np.unique(tags)) == tags.size  # position-keyed
+
+
+def test_chunk_swap_detected(key):
+    ct = jax.random.bits(jax.random.PRNGKey(4), (2, 512), jnp.uint32)
+    tags = mac.block_tags(ct, key, 256)
+    swapped = jnp.concatenate([ct[:, 256:], ct[:, :256]], axis=1)
+    assert not bool(mac.verify_block_tags(swapped, key, 256, tags).all())
+
+
+def test_divisor_aligned_chunking(key):
+    # 608 words, cw=512 -> n_chunks rounds up to an exact divisor
+    ct = jax.random.bits(jax.random.PRNGKey(5), (4, 608), jnp.uint32)
+    tags = mac.block_tags(ct, key, 512)
+    assert 608 % tags.shape[-1] == 0
+    assert bool(mac.verify_block_tags(ct, key, 512, tags).all())
+
+
+def test_bf16_ciphertext_mac(key):
+    ct = jax.lax.bitcast_convert_type(
+        jax.random.normal(jax.random.PRNGKey(6), (4, 256), jnp.bfloat16),
+        jnp.uint16)
+    tags = mac.block_tags(ct, key, 64)
+    bad = ct.at[2, 100].add(1)
+    assert not bool(mac.verify_block_tags(bad, key, 64, tags).all())

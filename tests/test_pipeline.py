@@ -1,0 +1,65 @@
+"""Sealed pipeline parallelism: pipelined loss/grads == unpipelined model."""
+import os
+import subprocess
+import sys
+import textwrap
+
+ENV = dict(os.environ,
+           XLA_FLAGS="--xla_force_host_platform_device_count=8",
+           PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def test_sealed_pipeline_matches_reference():
+    code = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.models.config import ModelConfig
+    from repro.models import registry
+    from repro.parallel.pipeline import make_pipelined_loss, \\
+        stack_params_by_stage
+
+    cfg = ModelConfig(arch_id="pp", family="dense", n_layers=4, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab=97, q_block=8,
+                      dtype="float32", param_dtype="float32", remat="none")
+    m = registry.get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0), cfg)
+
+    M, Bm, S = 3, 2, 16
+    tok = jax.random.randint(jax.random.PRNGKey(1), (M, Bm, S), 0, cfg.vocab)
+    batch = {"tokens": tok, "labels": tok}
+
+    # reference: mean over microbatches of the plain loss
+    ref = jnp.mean(jnp.stack([
+        m.loss(params, cfg, {"tokens": tok[i], "labels": tok[i]})
+        for i in range(M)]))
+
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    staged = stack_params_by_stage(params, 2)
+    key = jnp.array([5, 6], jnp.uint32)
+    for seal in (None, key):
+        fn = make_pipelined_loss(cfg, mesh, n_stages=2, n_micro=M,
+                                 seal_key=seal)
+        got = jax.jit(fn)(staged, batch)
+        print("pipelined:", float(got), "ref:", float(ref), "seal:",
+              seal is not None)
+        assert abs(float(got) - float(ref)) < 1e-4
+    # gradients flow through the sealed hop (transpose of ppermute + XOR)
+    fn = make_pipelined_loss(cfg, mesh, n_stages=2, n_micro=M, seal_key=key)
+    l, g = fn.value_and_grad(staged, batch)
+    assert abs(float(l) - float(ref)) < 1e-4
+    gn = sum(float(jnp.abs(x).sum()) for x in jax.tree_util.tree_leaves(g))
+    assert np.isfinite(gn) and gn > 0
+    # grads must match the unpipelined reference grads
+    ref_g = jax.grad(lambda p: jnp.mean(jnp.stack([
+        m.loss(p, cfg, {"tokens": tok[i], "labels": tok[i]})
+        for i in range(M)])))(params)
+    from repro.parallel.pipeline import stack_params_by_stage as spbs
+    ref_gs = spbs(ref_g, 2)
+    for a, b in zip(jax.tree_util.tree_leaves(g),
+                    jax.tree_util.tree_leaves(ref_gs)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)
+    print("grad norm:", gn)
+    print("OK")
+    """
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       env=ENV, capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
