@@ -4,6 +4,8 @@
   micro        seal/unseal throughput, chunk-size trade-off (paper §3.3.2),
                trust-establishment latency (§3.2)
   sealed_lm    Table-1 analogue measured on an LM (none/ctr/trusted)
+  serve_gateway  multi-tenant continuous-batching gateway: tok/s + p50/p95
+               per-token latency for mixed-length traffic (off vs trusted)
   roofline     §Roofline three-term table for all 40 cells (needs
                results/dryrun.jsonl from repro.launch.dryrun)
 """
@@ -19,6 +21,7 @@ def main() -> None:
     import table1_vta
     import micro
     import sealed_lm
+    import serve_gateway
 
     print("=" * 72)
     table1_vta.run()
@@ -26,6 +29,8 @@ def main() -> None:
     micro.run()
     print("=" * 72)
     sealed_lm.run()
+    print("=" * 72)
+    serve_gateway.run()
     print("=" * 72)
     if os.path.exists("results/dryrun.jsonl"):
         import roofline

@@ -1,0 +1,58 @@
+"""Gateway serving benchmark — mixed-length multi-tenant traffic.
+
+Reports throughput (tok/s) and per-token latency percentiles (p50/p95) for
+the continuous-batching gateway over the sealed paged KV pool, at the three
+paper protection levels:
+
+    off      — plain pool, no handshake sealing (paper's "VTA" row)
+    trusted  — per-tenant CTR + per-page MAC + freshness ("VTA-trusted")
+
+Smoke-sized model so the numbers measure the *protocol machinery* (seal /
+unseal / MAC per page, variable-occupancy gather) rather than raw FLOPs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def run(arch: str = "granite-3-2b", tenants: int = 3, requests: int = 6,
+        max_new: int = 8, slots: int = 4) -> None:
+    import jax
+
+    from repro import configs
+    from repro.models import registry
+    from repro.serve import SecureGateway
+
+    cfg = configs.get_config(arch, smoke=True)
+    params = registry.get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+    print(f"serve_gateway: {arch} (smoke), {tenants} tenants, "
+          f"{requests} mixed-length requests, {max_new} new tokens each")
+    header = (f"{'mode':>8} | {'tok/s':>8} | {'p50 ms':>8} | {'p95 ms':>8} | "
+              f"{'ttft ms':>8} | {'pages peak':>10}")
+    print(header)
+    print("-" * len(header))
+    for mode in ("off", "trusted"):
+        gw = SecureGateway(cfg, params, security=mode, max_slots=slots,
+                           page_size=8, n_pages=64, max_pages_per_seq=4)
+        rng = np.random.RandomState(0)
+        for i in range(requests):
+            plen = int(rng.randint(4, 17))
+            gw.submit(f"tenant-{i % tenants}",
+                      rng.randint(0, cfg.vocab, plen), max_new=max_new)
+        # warm-up pass compiled the graphs; re-run fresh traffic for timing
+        gw.drain()
+        gw.reset_metrics()
+        rng = np.random.RandomState(1)
+        for i in range(requests):
+            plen = int(rng.randint(4, 17))
+            gw.submit(f"tenant-{i % tenants}",
+                      rng.randint(0, cfg.vocab, plen), max_new=max_new)
+        gw.drain()
+        m = gw.metrics()
+        print(f"{mode:>8} | {m['tok_per_s']:8.1f} | "
+              f"{m['p50_token_ms']:8.1f} | {m['p95_token_ms']:8.1f} | "
+              f"{m['mean_ttft_ms']:8.1f} | {m['kv_pages_peak']:10d}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""JAX version compatibility.
+
+The codebase targets the jax 0.8-style ``jax.shard_map`` surface
+(``axis_names=`` for partial-manual, ``check_vma=``).  Older runtimes
+(0.4.x) only ship ``jax.experimental.shard_map.shard_map`` with the
+equivalent ``auto=`` / ``check_rep=`` spelling.  ``shard_map`` below is the
+one entry point call sites use; it translates when needed:
+
+    axis_names={a,...}  ->  auto = mesh.axis_names - axis_names
+    check_vma=...       ->  check_rep=...   (the replication/vma tracking
+                            that drives correct transpose psum insertion)
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=None):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=None):
+        # 0.4.x partial-auto (auto=) lowers axis_index to a PartitionId op
+        # that SPMD partitioning rejects; run full-manual instead.  Bodies
+        # here only collect over their named axes and leave the rest
+        # replicated, so full-manual is numerically identical — it merely
+        # forgoes auto-sharding of the untouched axes.
+        del axis_names
+        check_rep = True if check_vma is None else bool(check_vma)
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_rep)

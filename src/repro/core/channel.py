@@ -15,6 +15,7 @@ computing on attacker-controlled data).
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Any, Callable
 
 import jax
@@ -25,6 +26,32 @@ from . import sealed as sealed_lib
 from . import trust
 from .policy import SealedSpec, SecurityConfig
 from .registers import DeviceRegisterFile, HostRegisterFile
+
+# ---------------------------------------------------------------------------
+# Nonce domain separation.
+#
+# A sealing nonce is a 32-bit word structured as (session-id, epoch, counter):
+#
+#     bits 24..31   session id   (per-SecureChannel, process-unique)
+#     bits 16..23   key epoch    (bumped by rekey/rotation and on counter wrap)
+#     bits  0..15   counter      (monotone within an epoch; spans reservable)
+#
+# Two channels therefore can never collide on a (key, nonce) pair even if they
+# were (mis)configured with the same key: their session-id lanes differ.  The
+# old implementation was a bare Python counter with a fixed stride — identical
+# keys in two channels silently reused counter space.
+# ---------------------------------------------------------------------------
+
+_COUNTER_BITS = 16
+_EPOCH_BITS = 8
+_SESSION_BITS = 8
+_COUNTER_SPACE = 1 << _COUNTER_BITS
+_EPOCH_SPACE = 1 << _EPOCH_BITS
+_session_ids = itertools.count(1)
+
+# per-leaf nonce stride used by sealed.seal_tree — reseal() may bump each
+# leaf's nonce up to stride-1 times before lanes would touch.
+TREE_LEAF_STRIDE = 131
 
 
 def poison_unless(ok: jax.Array, tree):
@@ -53,7 +80,19 @@ class SecureChannel:
     config: SecurityConfig
     host_regs: HostRegisterFile = None
     device_regs: DeviceRegisterFile = None
+    session_id: int = 0             # 0 => auto-assign a process-unique id
+    epoch: int = 0                  # key epoch (bumped by rekey / wrap)
     _nonce_counter: int = 0
+
+    def __post_init__(self):
+        if not self.session_id:
+            self.session_id = next(_session_ids)
+        if self.session_id >= (1 << _SESSION_BITS):
+            # a wrapped lane would silently collide with an earlier channel's
+            # (key, nonce) space — refuse, like epoch exhaustion does
+            raise trust.SecurityError(
+                "session-id space exhausted (max "
+                f"{(1 << _SESSION_BITS) - 1} channels per process)")
 
     @classmethod
     def establish(cls, config: SecurityConfig | None = None, device_id: str = "tpu-0"):
@@ -80,18 +119,65 @@ class SecureChannel:
     def jkey(self) -> jax.Array:
         return jnp.asarray(self.key_words, jnp.uint32)
 
-    def fresh_nonce(self) -> int:
-        self._nonce_counter += 1000003  # stride >> max per-tree leaves
-        return self._nonce_counter
+    def subkey(self, domain: int) -> jax.Array:
+        """Domain-separated data-plane subkey (e.g. the KV-cache lane)."""
+        from . import cipher
+        return cipher.derive_key(self.jkey, domain)
+
+    def bump_epoch(self) -> None:
+        self.epoch += 1
+        self._nonce_counter = 0
+        if self.epoch >= _EPOCH_SPACE:
+            raise trust.SecurityError(
+                "nonce epoch space exhausted — rotate the session key")
+
+    def fresh_nonce(self, span: int = 1) -> int:
+        """Reserve ``span`` consecutive counter slots; return the first nonce.
+
+        Nonces are (session-id, epoch, counter) — see the module header.  A
+        span that would cross the counter boundary rolls into a fresh epoch,
+        so a reservation is always contiguous and never reused.
+        """
+        span = max(1, int(span))
+        if span > _COUNTER_SPACE:
+            raise trust.SecurityError(
+                f"nonce span {span} exceeds the per-epoch counter space; "
+                "seal in smaller trees or rotate more often")
+        if self._nonce_counter + span > _COUNTER_SPACE:
+            self.bump_epoch()
+        base = self._nonce_counter
+        self._nonce_counter += span
+        return ((self.session_id & ((1 << _SESSION_BITS) - 1)) << 24
+                | (self.epoch & (_EPOCH_SPACE - 1)) << 16
+                | base)
+
+    def rekey(self, key_words: np.ndarray, key_bytes: bytes) -> None:
+        """Install a rotated session key (new handshake material).
+
+        Bumps the epoch so nonces from the old key's lifetime are never
+        replayed against the new key, and re-keys the Rule-3 register path.
+        Sealed state from before the rotation must be re-sealed by the owner —
+        this is enforced by callers (the gateway rotates only idle tenants).
+        """
+        self.key_words = key_words
+        self.key_bytes = key_bytes
+        self.bump_epoch()
+        last = self.device_regs.last_nonce if self.device_regs else 0
+        self.host_regs = HostRegisterFile(key=key_bytes, nonce=last)
+        self.device_regs = DeviceRegisterFile(key=key_bytes, last_nonce=last)
 
     def upload(self, x: jax.Array, spec: SealedSpec | None = None):
         """Host -> untrusted HBM: seal a tensor (Rule 1)."""
         spec = spec or self.config.weights
-        return sealed_lib.seal(x, self.jkey, self.fresh_nonce(), spec)
+        return sealed_lib.seal(x, self.jkey, self.fresh_nonce(span=TREE_LEAF_STRIDE),
+                               spec)
 
     def upload_tree(self, tree, spec: SealedSpec | None = None):
         spec = spec or self.config.weights
-        return sealed_lib.seal_tree(tree, self.jkey, spec, self.fresh_nonce())
+        n_leaves = len(jax.tree_util.tree_leaves(tree))
+        span = TREE_LEAF_STRIDE * (n_leaves + 1)
+        return sealed_lib.seal_tree(tree, self.jkey, spec,
+                                    self.fresh_nonce(span=span))
 
     def download(self, st) -> jax.Array:
         """Untrusted HBM -> host enclave: unseal + verify (strict)."""

@@ -1,7 +1,11 @@
-"""Serving launcher (batched sealed generation).
+"""Serving launcher — multi-tenant secure gateway (continuous batching).
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
-        --batch 4 --prompt-len 16 --new 12
+        --tenants 3 --requests 6 --max-new 12
+
+Each tenant runs its own §3.2 attestation handshake; requests have mixed
+prompt lengths and share one sealed paged KV pool.  ``--engine fixed`` keeps
+the legacy equal-length fixed-slot path for comparison.
 """
 from __future__ import annotations
 
@@ -9,20 +13,83 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from .. import configs
 from ..core.channel import SecureChannel
 from ..models import registry
-from ..serve import ServeEngine
+from ..serve import SecureGateway, ServeEngine
+
+
+def _run_gateway(cfg, params, args) -> None:
+    gw = SecureGateway(cfg, params, security=args.security,
+                       max_slots=args.slots, page_size=args.page_size,
+                       n_pages=args.pages, max_pages_per_seq=args.max_pages,
+                       rotate_every=args.rotate_every)
+    rng = np.random.RandomState(0)
+    rids = []
+    for i in range(args.requests):
+        tenant = f"tenant-{i % args.tenants}"
+        plen = int(rng.randint(args.min_prompt, args.max_prompt + 1))
+        prompt = rng.randint(0, cfg.vocab, plen)
+        rids.append(gw.submit(tenant, prompt, max_new=args.max_new))
+    gw.drain()
+    for rid in rids:
+        out = gw.collect(rid)
+        req = gw.scheduler.requests[rid]
+        print(f"  req {rid} [{req.tenant_id}, prompt {req.prompt_len:3d}] "
+              f"-> {out[:8].tolist()}{'...' if len(out) > 8 else ''} "
+              f"({gw.status(rid)})")
+    m = gw.metrics()
+    print(f"{m['tokens']} tokens in {m['elapsed_s']:.2f} s "
+          f"({m['tok_per_s']:.1f} tok/s); "
+          f"p50 {m['p50_token_ms']:.1f} ms  p95 {m['p95_token_ms']:.1f} ms  "
+          f"ttft {m['mean_ttft_ms']:.1f} ms")
+    print(f"pages peak {m['kv_pages_peak']}  rotations {m['rotations']}  "
+          f"launches verified: {m['launches_verified']}")
+
+
+def _run_fixed(cfg, params, args) -> None:
+    channel = (SecureChannel.establish() if args.security == "trusted"
+               else SecureChannel.insecure())
+    if args.security == "trusted":
+        params = channel.upload_tree(params)
+    max_len = args.max_prompt + args.max_new + 4
+    engine = ServeEngine(cfg=cfg, params=params, channel=channel,
+                         max_len=max_len)
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (args.slots, args.max_prompt), 0, cfg.vocab)}
+    if cfg.frontend == "patch":
+        batch["patch_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (args.slots, cfg.n_frontend_tokens, cfg.d_model))
+    if cfg.frontend == "frame":
+        batch["frame_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2), (args.slots, args.max_prompt, cfg.d_model))
+    t0 = time.perf_counter()
+    out = engine.generate(batch, n_new=args.max_new)
+    dt = time.perf_counter() - t0
+    print(out)
+    print(f"{args.slots} x {args.max_new} tokens in {dt*1e3:.0f} ms "
+          f"({args.slots*args.max_new/dt:.1f} tok/s); launches verified: "
+          f"{channel.device_regs.last_nonce}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=configs.ARCH_IDS)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--new", type=int, default=12)
+    ap.add_argument("--engine", default="gateway",
+                    choices=("gateway", "fixed"))
+    ap.add_argument("--tenants", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--min-prompt", type=int, default=4)
+    ap.add_argument("--max-prompt", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--pages", type=int, default=64)
+    ap.add_argument("--max-pages", type=int, default=4)
+    ap.add_argument("--rotate-every", type=int, default=0)
     ap.add_argument("--security", default="trusted", choices=("trusted", "off"))
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full", dest="smoke", action="store_false")
@@ -31,31 +98,13 @@ def main() -> None:
     cfg = configs.get_config(args.arch, smoke=args.smoke)
     model = registry.get_model(cfg)
     params = model.init(jax.random.PRNGKey(0), cfg)
-    channel = (SecureChannel.establish() if args.security == "trusted"
-               else SecureChannel.insecure())
-    if args.security == "trusted":
-        params = channel.upload_tree(params)
-    max_len = args.prompt_len + args.new + 4
-    engine = ServeEngine(cfg=cfg, params=params, channel=channel,
-                         max_len=max_len)
-
-    batch = {"tokens": jax.random.randint(
-        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab)}
-    if cfg.frontend == "patch":
-        batch["patch_embeds"] = jax.random.normal(
-            jax.random.PRNGKey(2),
-            (args.batch, cfg.n_frontend_tokens, cfg.d_model))
-    if cfg.frontend == "frame":
-        batch["frame_embeds"] = jax.random.normal(
-            jax.random.PRNGKey(2), (args.batch, args.prompt_len, cfg.d_model))
-
-    t0 = time.perf_counter()
-    out = engine.generate(batch, n_new=args.new)
-    dt = time.perf_counter() - t0
-    print(out)
-    print(f"{args.batch} x {args.new} tokens in {dt*1e3:.0f} ms "
-          f"({args.batch*args.new/dt:.1f} tok/s); launches verified: "
-          f"{channel.device_regs.last_nonce}")
+    if args.engine == "gateway" and cfg.family == "dense":
+        _run_gateway(cfg, params, args)
+    else:
+        if args.engine == "gateway":
+            print(f"{cfg.family} family has no paged path yet; "
+                  "falling back to the fixed-slot engine")
+        _run_fixed(cfg, params, args)
 
 
 if __name__ == "__main__":

@@ -74,16 +74,22 @@ _NEG_INF = -1e30
 
 
 def _attend_block(q, k, v, qpos, tpos, causal: bool, t_valid=None):
-    """q: [B,qb,K,G,hd]; k,v: [B,T,K,hd]; qpos [qb]; tpos [T]. -> [B,qb,K,G,hd]"""
+    """q: [B,qb,K,G,hd]; k,v: [B,T,K,hd]; qpos [qb]; tpos [T]. -> [B,qb,K,G,hd]
+
+    t_valid: scalar, or [B] vector for per-sequence cache lengths (the paged
+    variable-occupancy decode path)."""
     scale = q.shape[-1] ** -0.5
     logits = jnp.einsum("bqkgd,btkd->bqkgt", q, k,
                         preferred_element_type=jnp.float32) * scale
     mask = jnp.ones((qpos.shape[0], tpos.shape[0]), bool)
     if causal:
         mask = tpos[None, :] <= qpos[:, None]
+    bmask = mask[None]                                    # [1, qb, T]
     if t_valid is not None:
-        mask = mask & (tpos[None, :] < t_valid)
-    logits = jnp.where(mask[None, :, None, None, :], logits, _NEG_INF)
+        tv = jnp.asarray(t_valid)
+        tv = tv[:, None, None] if tv.ndim else tv         # [B,1,1] | scalar
+        bmask = bmask & (tpos[None, None, :] < tv)        # [B|1, qb, T]
+    logits = jnp.where(bmask[:, :, None, None, :], logits, _NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1)
     return jnp.einsum("bqkgt,btkd->bqkgd", probs, v).astype(v.dtype)
 
@@ -93,7 +99,8 @@ def gqa_attention(q, k, v, *, causal: bool = True, q_block: int = 512,
     """Blocked grouped-query attention.
 
     q: [B, S, H, hd];  k, v: [B, T, K, hd] with H = K * G.
-    t_valid: optional scalar — number of valid cache positions (decode).
+    t_valid: optional number of valid cache positions (decode) — a scalar,
+    or a [B] vector when sequences in the batch have different lengths.
     """
     B, S, H, hd = q.shape
     T, K = k.shape[1], k.shape[2]

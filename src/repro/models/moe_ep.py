@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from .. import compat
 
 
 def moe_ffn_ep(p, cfg, x, mesh, data_axis="data", model_axis="model"):
@@ -73,7 +74,7 @@ def moe_ffn_ep(p, cfg, x, mesh, data_axis="data", model_axis="model"):
         return jax.lax.psum(y_partial, model_axis)             # TP-style combine
 
     xt = x.reshape(T, D)
-    out = jax.shard_map(
+    out = compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(data_axis), P(), P(model_axis), P(model_axis),
                   P(model_axis)),

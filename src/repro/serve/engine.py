@@ -1,29 +1,56 @@
-"""Batched serving engine with a sealed KV cache.
+"""Serving engines with sealed KV caches.
 
-The engine is the host-program role of the paper: it holds the session key,
-keeps model weights and the KV cache sealed in (untrusted) HBM, and launches
-jitted prefill / decode steps that unseal on demand in-graph.  Each launch
-goes through the SecureChannel's register-protection path (Rule 3) so an
-untrusted driver cannot tamper with or replay launch descriptors.
+Two execution engines share this module:
 
-Batching: fixed-slot batches of equal-length prompts (left-trim/pad by the
-caller).  Greedy sampling; the decode loop is a host loop over a single
-jitted step, as production engines do.
+``ServeEngine`` — the legacy fixed-slot engine: one sealed [L, B, max_len]
+cache per batch, equal-length prompts, whole-batch nonce epochs.  Kept as the
+reference path (and the baseline the paged engine is tested against).
+
+``PagedEngine`` — the multi-tenant engine behind the gateway: decodes at
+variable occupancy over a shared *paged* KV pool (serve/kv_pager.py).  Each
+active slot carries its own sequence length, its own page table and its own
+tenant key (via page branding), so mixed-length requests from mutually
+distrusting tenants share one physical cache.  Model weights stay sealed
+under the *provider* channel; KV pages are sealed under *tenant* channels.
+
+Both engines launch through SecureChannel.launch (Rule 3) at the call sites
+that drive them; the jitted bodies gate every output on the in-graph
+verification predicates (tamper => NaN-poisoned logits / sentinel tokens).
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import cipher
 from ..core import sealed as sealed_lib
 from ..core.channel import SecureChannel
-from ..models import registry
+from ..models import layers as L
+from ..models import registry, transformer
+from . import kv_pager
 
+# domain separator for the fixed-slot engine's KV lane — weight-upload nonces
+# and KV-epoch nonces live under different derived keys, so the engine's small
+# integer epochs can never collide with the channel's structured nonces.
+KV_CACHE_DOMAIN = 0x4B5643  # "KVC"
+
+TOKEN_POISON = np.iinfo(np.int32).min  # sentinel for integrity-failed slots
+
+
+def unseal_params(params, key: jax.Array, sealed: bool):
+    """Shared in-graph param unseal: returns (tree, ok predicate)."""
+    if not sealed:
+        return params, jnp.bool_(True)
+    return sealed_lib.unseal_tree(params, key)
+
+
+# ---------------------------------------------------------------------------
+# fixed-slot engine (legacy reference path)
+# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class ServeEngine:
@@ -35,29 +62,23 @@ class ServeEngine:
     def __post_init__(self):
         self.model = registry.get_model(self.cfg)
         self._sealed = self.channel.config.enabled
+        self._kv_key = self.channel.subkey(KV_CACHE_DOMAIN)
         self._nonce_epoch = 1
         self._prefill = jax.jit(partial(self._prefill_impl))
         self._decode = jax.jit(partial(self._decode_impl))
 
     # -- jitted bodies ---------------------------------------------------
-    def _unsealed_params(self):
-        if not self._sealed:
-            return self.params, jnp.bool_(True)
-        return sealed_lib.unseal_tree(self.params, self.channel.jkey)
-
     def _prefill_impl(self, params_in, batch, nonce):
-        params, ok = (sealed_lib.unseal_tree(params_in, self.channel.jkey)
-                      if self._sealed else (params_in, jnp.bool_(True)))
-        seal_ctx = (self.channel.jkey, nonce) if self._sealed else None
+        params, ok = unseal_params(params_in, self.channel.jkey, self._sealed)
+        seal_ctx = (self._kv_key, nonce) if self._sealed else None
         logits, cache = self.model.prefill(params, self.cfg, batch,
                                            self.max_len, seal_ctx=seal_ctx)
         logits = jnp.where(ok, logits, jnp.nan)
         return logits, cache
 
     def _decode_impl(self, params_in, cache, tokens):
-        params, ok = (sealed_lib.unseal_tree(params_in, self.channel.jkey)
-                      if self._sealed else (params_in, jnp.bool_(True)))
-        seal_ctx = ((self.channel.jkey, cache.get("nonce"))
+        params, ok = unseal_params(params_in, self.channel.jkey, self._sealed)
+        seal_ctx = ((self._kv_key, cache.get("nonce"))
                     if self._sealed else None)
         logits, cache = self.model.decode_step(params, self.cfg, cache, tokens,
                                                seal_ctx=seal_ctx)
@@ -84,3 +105,218 @@ class ServeEngine:
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             out.append(np.asarray(tok))
         return np.stack(out, axis=1)  # [B, n_new]
+
+
+# ---------------------------------------------------------------------------
+# paged engine (continuous batching over the shared sealed pool)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PagedEngine:
+    """Variable-occupancy decode over a paged, per-tenant-sealed KV pool.
+
+    Dense-transformer families only (the fixed-slot engine remains the path
+    for recurrent / encdec families).  All shapes the jitted step sees are
+    static: max_slots lanes, max_pages page-table columns, pool of n_pages —
+    occupancy varies through the ``active`` mask, not through shapes.
+    """
+    cfg: object
+    params: object                  # sealed under the provider channel
+    channel: SecureChannel          # provider channel (weights + launches)
+    pool: kv_pager.PagedKVPool
+    max_slots: int
+    max_pages: int                  # page-table columns per sequence
+
+    def __post_init__(self):
+        if self.cfg.family not in ("dense",):
+            raise ValueError(
+                f"PagedEngine supports dense transformers, got "
+                f"{self.cfg.family!r}")
+        self._sealed_params = self.channel.config.enabled
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill = jax.jit(self._prefill_impl)  # retraces per bucket len
+
+    # -- prefill ---------------------------------------------------------
+    def _prefill_impl(self, params_in, tokens, true_len, tenant_key,
+                      page_nonces):
+        """tokens: [1, S] padded to a page multiple; page_nonces: [S/ps]."""
+        cfg = self.cfg
+        params, okp = unseal_params(params_in, self.channel.jkey,
+                                    self._sealed_params)
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+        positions = jnp.arange(x.shape[1])
+        x, (ks, vs) = transformer.backbone(params, cfg, x, positions)
+        x_last = jax.lax.dynamic_slice(
+            x, (0, true_len - 1, 0), (1, 1, x.shape[-1]))
+        logits = transformer.logits_of(params, cfg, x_last)[0, 0]
+        logits = jnp.where(okp, logits, jnp.nan)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        tok = jnp.where(okp, tok, TOKEN_POISON)
+
+        ps = self.pool.page_size
+        n_p = tokens.shape[1] // ps
+        Lc, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+        # [L, 1, S, K, hd] -> per-page [n_p, L, ps, K, hd]
+        kp = ks[:, 0].reshape(Lc, n_p, ps, K, hd).transpose(1, 0, 2, 3, 4)
+        vp = vs[:, 0].reshape(Lc, n_p, ps, K, hd).transpose(1, 0, 2, 3, 4)
+        if self.pool.sealed:
+            kct, vct, ktags, vtags = jax.vmap(
+                lambda k_, v_, n_: kv_pager.seal_page(
+                    k_, v_, tenant_key, n_, self.pool.chunk_words)
+            )(kp, vp, page_nonces)
+        else:
+            kct, vct = jax.vmap(kv_pager.bitcast_page)(kp, vp)
+            ktags = jnp.zeros((n_p, self.pool.n_tags), jnp.uint32)
+            vtags = jnp.zeros((n_p, self.pool.n_tags), jnp.uint32)
+        return tok, logits, okp, kct, vct, ktags, vtags
+
+    def prefill(self, tokens: np.ndarray, pages: list[int]):
+        """Run a single request's prefill and install its sealed pages.
+
+        tokens: [S] int32 prompt (true length); pages: the physical pages
+        already allocated (and branded) for this request.  Returns the first
+        generated token (int; TOKEN_POISON if weights failed verification).
+        """
+        ps = self.pool.page_size
+        S = int(tokens.shape[0])
+        bucket = -(-S // ps) * ps
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :S] = tokens
+        n_p = bucket // ps
+        page_idx = jnp.asarray(pages[:n_p], jnp.int32)
+        tenant_key = self.pool.keys[page_idx[0]]
+        page_nonces = self.pool.nonces[page_idx]
+        tok, _, okp, kct, vct, ktags, vtags = self._prefill(
+            self.params, jnp.asarray(padded), jnp.asarray(S, jnp.int32),
+            tenant_key, page_nonces)
+        self.pool.write_pages(pages[:n_p], kct, vct, ktags, vtags)
+        return int(tok)
+
+    # -- decode ----------------------------------------------------------
+    def _decode_impl(self, params_in, tokens, seq_lens, active, page_tables,
+                     write_pp, pool_arrays):
+        """One continuous-batching decode step at variable occupancy.
+
+        tokens [B] int32 — last emitted token per slot (0 for idle lanes)
+        seq_lens [B]     — tokens already in the cache; the new KV lands here
+        active [B] bool  — live-slot mask
+        page_tables [B, P] int32 — physical page per logical page (pad = 0)
+        write_pp [B]     — physical page receiving this step's KV
+                           (SCRATCH_PAGE for idle lanes)
+        pool_arrays      — PagedKVPool.arrays()
+        """
+        cfg = self.cfg
+        k_ct, v_ct, k_tags, v_tags, nonces, keys = pool_arrays
+        B, P = page_tables.shape
+        ps = self.pool.page_size
+        T = P * ps
+        Lc, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+
+        params, okp = unseal_params(params_in, self.channel.jkey,
+                                    self._sealed_params)
+
+        # -- gather + unseal this batch's pages (in-graph page-table walk) --
+        flat_pt = page_tables.reshape(-1)
+        kp_ct = k_ct[flat_pt]
+        vp_ct = v_ct[flat_pt]
+        if self.pool.sealed:
+            kpl, vpl, ok_page = jax.vmap(
+                lambda kc, vc, kt, vt, kw, nn: kv_pager.unseal_page(
+                    kc, vc, kt, vt, kw, nn, cfg.act_dtype,
+                    self.pool.chunk_words)
+            )(kp_ct, vp_ct, k_tags[flat_pt], v_tags[flat_pt],
+              keys[flat_pt], nonces[flat_pt])
+        else:
+            kpl = jax.lax.bitcast_convert_type(kp_ct, cfg.act_dtype)
+            vpl = jax.lax.bitcast_convert_type(vp_ct, cfg.act_dtype)
+            ok_page = jnp.ones((B * P,), bool)
+        ok_page = ok_page.reshape(B, P)
+        # only pages holding valid positions count toward a slot's verdict,
+        # and idle lanes (scratch-page walks over garbage) never fail
+        page_used = (jnp.arange(P)[None, :] * ps) < seq_lens[:, None]
+        ok_seq = (jnp.all(ok_page | ~page_used, axis=1) & okp) | ~active
+
+        # [B*P, L, ps, K, hd] -> [L, B, T, K, hd]
+        kcache = kpl.reshape(B, P, Lc, ps, K, hd).transpose(
+            2, 0, 1, 3, 4, 5).reshape(Lc, B, T, K, hd)
+        vcache = vpl.reshape(B, P, Lc, ps, K, hd).transpose(
+            2, 0, 1, 3, 4, 5).reshape(Lc, B, T, K, hd)
+        # slots beyond each sequence's length hold keystream noise — zero them
+        tmask = (jnp.arange(T)[None, :] < seq_lens[:, None])      # [B, T]
+        kcache = jnp.where(tmask[None, :, :, None, None], kcache,
+                           jnp.zeros((), cfg.act_dtype))
+        vcache = jnp.where(tmask[None, :, :, None, None], vcache,
+                           jnp.zeros((), cfg.act_dtype))
+
+        x = jnp.take(params["embed"], tokens[:, None],
+                     axis=0).astype(cfg.act_dtype)                # [B, 1, D]
+        positions = seq_lens[:, None]                             # [B, 1]
+
+        def block(carry, xs):
+            (xc,) = carry
+            lp, kc, vc = xs                                       # kc [B,T,K,hd]
+            h = L.rms_norm(xc, lp["ln1"], cfg.norm_eps)
+            q, kn, vn = L.project_qkv(lp["attn"], cfg, h, positions)
+            kc2 = jax.vmap(
+                lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (p, 0, 0))
+            )(kc, kn, seq_lens)
+            vc2 = jax.vmap(
+                lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (p, 0, 0))
+            )(vc, vn, seq_lens)
+            a = L.gqa_attention(q, kc2, vc2, causal=False,
+                                t_valid=seq_lens + 1)
+            xc = xc + L.attn_out(lp["attn"], a, B, 1)
+            h2 = L.rms_norm(xc, lp["ln2"], cfg.norm_eps)
+            xc = xc + L.swiglu(lp["mlp"], h2)
+            return (xc,), (kc2, vc2)
+
+        (x,), (nk, nv) = jax.lax.scan(
+            block, (x,), (params["layers"], kcache, vcache))
+
+        logits = transformer.logits_of(params, cfg, x)[:, 0]      # [B, V]
+        logits = jnp.where(ok_seq[:, None], logits, jnp.nan)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        tok = jnp.where(ok_seq, tok, TOKEN_POISON)
+        tok = jnp.where(active, tok, 0)                           # idle lanes
+
+        # -- write-back: reseal only the page that received this step's KV --
+        page_off = (seq_lens // ps) * ps                          # [B]
+        nk_b = nk.transpose(1, 0, 2, 3, 4)                        # [B,L,T,K,hd]
+        nv_b = nv.transpose(1, 0, 2, 3, 4)
+        k_new = jax.vmap(
+            lambda c, o: jax.lax.dynamic_slice(c, (0, o, 0, 0),
+                                               (Lc, ps, K, hd))
+        )(nk_b, page_off)                                         # [B,L,ps,K,hd]
+        v_new = jax.vmap(
+            lambda c, o: jax.lax.dynamic_slice(c, (0, o, 0, 0),
+                                               (Lc, ps, K, hd))
+        )(nv_b, page_off)
+        keys_w = keys[write_pp]                                   # [B, 2]
+        nonce_w = nonces[write_pp] + jnp.uint32(1)                # freshness
+        if self.pool.sealed:
+            kct_n, vct_n, ktags_n, vtags_n = jax.vmap(
+                lambda k_, v_, kw, nn: kv_pager.seal_page(
+                    k_, v_, kw, nn, self.pool.chunk_words)
+            )(k_new, v_new, keys_w, nonce_w)
+        else:
+            kct_n, vct_n = jax.vmap(kv_pager.bitcast_page)(k_new, v_new)
+            ktags_n = jnp.zeros((B, self.pool.n_tags), jnp.uint32)
+            vtags_n = jnp.zeros((B, self.pool.n_tags), jnp.uint32)
+        # idle lanes target SCRATCH_PAGE; live lanes hold distinct pages, so
+        # the scatter has no meaningful index collisions.
+        k_ct = k_ct.at[write_pp].set(kct_n)
+        v_ct = v_ct.at[write_pp].set(vct_n)
+        k_tags = k_tags.at[write_pp].set(ktags_n)
+        v_tags = v_tags.at[write_pp].set(vtags_n)
+        nonces = nonces.at[write_pp].set(nonce_w)
+        return tok, ok_seq, (k_ct, v_ct, k_tags, v_tags, nonces, keys)
+
+    def decode_step(self, tokens, seq_lens, active, page_tables, write_pp):
+        """Host-side wrapper: threads the pool through the jitted body."""
+        tok, ok, arrays = self._decode(
+            self.params, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(seq_lens, jnp.int32), jnp.asarray(active, bool),
+            jnp.asarray(page_tables, jnp.int32),
+            jnp.asarray(write_pp, jnp.int32), self.pool.arrays())
+        self.pool.update_arrays(arrays)
+        return np.asarray(tok), np.asarray(ok)

@@ -1,0 +1,152 @@
+"""SecureGateway — the multi-tenant serving front-end.
+
+The gateway is the host-program role of the paper, generalized to many
+mutually-distrusting tenants on one trusted accelerator:
+
+  * one *provider* session seals the model weights and MACs the global
+    serve-step launch descriptors (Rule 3);
+  * each tenant gets its own attested session (serve/sessions.py) whose key
+    seals that tenant's KV pages in the shared pool (serve/kv_pager.py);
+  * a continuous-batching scheduler (serve/scheduler.py) interleaves
+    prefill and decode of mixed-length requests at variable occupancy.
+
+API: ``submit`` / ``step`` / ``collect`` (+ ``drain``), with throughput and
+latency metrics aggregated per gateway and per tenant.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from ..core.policy import SecurityConfig
+from .engine import PagedEngine
+from .kv_pager import PagedKVPool
+from .scheduler import Scheduler
+from .sessions import SessionManager
+
+PROVIDER = "_provider"
+
+
+class SecureGateway:
+    def __init__(self, cfg, params, *, security: str = "trusted",
+                 max_slots: int = 4, page_size: int = 8, n_pages: int = 64,
+                 max_pages_per_seq: int = 4, rotate_every: int = 0,
+                 chunk_words: int = 128, device_id: str = "tpu-0"):
+        self.cfg = cfg
+        sec = (SecurityConfig() if security == "trusted"
+               else SecurityConfig.off())
+        self.sessions = SessionManager(device_id, config=sec,
+                                       rotate_every=rotate_every)
+        provider = self.sessions.register(PROVIDER).channel
+        sealed = sec.enabled
+        params_dev = provider.upload_tree(params) if sealed else params
+        self.pool = PagedKVPool(
+            n_pages=n_pages, page_size=page_size, n_layers=cfg.n_layers,
+            n_kv_heads=cfg.n_kv_heads, hd=cfg.hd, dtype=cfg.act_dtype,
+            chunk_words=chunk_words, sealed=sealed)
+        self.engine = PagedEngine(
+            cfg=cfg, params=params_dev, channel=provider, pool=self.pool,
+            max_slots=max_slots, max_pages=max_pages_per_seq)
+        self.scheduler = Scheduler(self.engine, self.pool, self.sessions,
+                                   max_slots, max_pages_per_seq)
+        self._steps = 0
+        self._t_start = time.monotonic()
+        self._token_latency_ms: list[float] = []
+        self._per_tenant: dict[str, int] = {}
+        self._metrics_from_rid = 0
+
+    def reset_metrics(self) -> None:
+        """Start a fresh measurement window (e.g. after a warm-up pass)."""
+        self._steps = 0
+        self._t_start = time.monotonic()
+        self._token_latency_ms.clear()
+        self._per_tenant.clear()
+        self._metrics_from_rid = self.scheduler._next_rid
+
+    # -- tenant + request lifecycle -------------------------------------
+    def register_tenant(self, tenant_id: str):
+        """Run the §3.2 attestation handshake for a tenant (idempotent)."""
+        if tenant_id == PROVIDER:
+            raise ValueError("reserved tenant id")
+        return self.sessions.register(tenant_id)
+
+    def submit(self, tenant_id: str, prompt, max_new: int) -> int:
+        """Queue a generation request under the tenant's session. -> rid"""
+        self.register_tenant(tenant_id)
+        return self.scheduler.submit(tenant_id, np.asarray(prompt, np.int32),
+                                     max_new)
+
+    def step(self) -> dict:
+        """Advance the engine one scheduling step (admit + decode + evict)."""
+        t0 = time.monotonic()
+        provider = self.sessions.channel(PROVIDER)
+        active = [r.rid for r in self.scheduler.active]
+        events = provider.launch(
+            self.scheduler.step,
+            {"op": "serve_step", "step": self._steps,
+             "queued": len(self.scheduler.queue), "active": active})
+        dt_ms = (time.monotonic() - t0) * 1e3
+        self._steps += 1
+        for rid, _tok in events["emitted"]:
+            self._token_latency_ms.append(dt_ms)
+            req = self.scheduler.requests[rid]
+            self._per_tenant[req.tenant_id] = \
+                self._per_tenant.get(req.tenant_id, 0) + 1
+        return events
+
+    def collect(self, rid: int, max_steps: int = 100_000) -> np.ndarray:
+        """Step until ``rid`` finishes; return its tokens (int32 array).
+
+        A poisoned request (failed page/weight verification) still returns —
+        its last token is the TOKEN_POISON sentinel and ``status(rid)`` is
+        "poisoned".
+        """
+        req = self.scheduler.requests[rid]
+        for _ in range(max_steps):
+            if req.finished:
+                break
+            self.step()
+        if not req.finished:
+            raise RuntimeError(f"request {rid} did not finish")
+        return np.asarray(req.tokens_out, np.int32)
+
+    def status(self, rid: int) -> str:
+        return self.scheduler.requests[rid].status
+
+    def drain(self, max_steps: int = 100_000) -> None:
+        for _ in range(max_steps):
+            if self.scheduler.idle:
+                return
+            self.step()
+        raise RuntimeError("gateway did not drain")
+
+    # -- metrics ---------------------------------------------------------
+    def metrics(self) -> dict:
+        lat = sorted(self._token_latency_ms)
+
+        def pct(p):
+            return lat[min(len(lat) - 1, int(p * len(lat)))] if lat else 0.0
+
+        elapsed = time.monotonic() - self._t_start
+        n_tok = len(lat)
+        rotations = sum(s.rotations for s in
+                        (self.sessions.get(t) for t in self.sessions.tenants))
+        ttfts = [(r.t_first - r.t_submit) * 1e3
+                 for r in self.scheduler.requests.values()
+                 if r.t_first > 0 and r.rid >= self._metrics_from_rid]
+        return {
+            "steps": self._steps,
+            "tokens": n_tok,
+            "elapsed_s": elapsed,
+            "tok_per_s": n_tok / elapsed if elapsed > 0 else 0.0,
+            "p50_token_ms": pct(0.50),
+            "p95_token_ms": pct(0.95),
+            "mean_ttft_ms": sum(ttfts) / len(ttfts) if ttfts else 0.0,
+            "tokens_per_tenant": dict(self._per_tenant),
+            "kv_pages_peak": self.pool.stats["peak_live"],
+            "kv_pages_free": self.pool.free_pages,
+            "rotations": rotations,
+            "launches_verified": self.sessions.channel(
+                PROVIDER).device_regs.last_nonce,
+        }

@@ -1,0 +1,222 @@
+"""Sealed *paged* KV cache — one physical pool shared by all tenants.
+
+The fixed-slot engine seals a [L, B, max_len, K, hd] cache per batch, which
+forces equal-length prompts and dedicates max_len slots to every sequence.
+Here the unit of sealing is a fixed-size **page** holding ``page_size`` token
+slots across all layers:
+
+    k page plaintext: [n_layers, page_size, n_kv_heads, hd]   (v likewise)
+
+and variable-length sequences map onto the shared pool through per-sequence
+page tables (vLLM-style), gathered in-graph at decode time.
+
+Security model (paper Rules 1/2, per page):
+  * confidentiality — each page is CTR-encrypted under the *owning tenant's*
+    session key, via k/v lane subkeys, with a per-page nonce; every rewrite
+    of a page bumps its nonce (freshness), so counters are never reused.
+  * integrity — encrypt-then-MAC chunk tags over the page ciphertext, keyed
+    by a (tenant key, page nonce)-bound MAC key; a tampered or replayed page
+    fails verification and NaN-poisons only the *owning* request's output.
+  * isolation — pages of tenant A are sealed under A's key: B's channel key
+    cannot unseal or forge them, and the (session-id, epoch, counter) nonce
+    lanes of the two channels are disjoint by construction (core/channel.py).
+
+Threat-model note: ciphertext, tags and nonces live in untrusted HBM and
+are attacker-visible.  The per-page key *words* are NOT — they model the
+enclave/accelerator-resident slot->tenant-key map (on real hardware they
+would sit in on-die SRAM next to the session keys).  This simulation keeps
+them in a device array purely so the page-table gather stays in-graph; they
+are trusted state, and nothing derives them from attacker-visible data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import cipher, mac
+
+# data-plane lane separation: k pages, v pages and page MACs never share a
+# (key, nonce) space even though all three derive from one tenant session key.
+KV_K_DOMAIN = 0x4B5047   # "KPG"
+KV_V_DOMAIN = 0x565047   # "VPG"
+KV_MAC_DOMAIN = 0x4D5047  # "MPG"
+
+SCRATCH_PAGE = 0  # physical page 0 is never allocated: pad entries in page
+                  # tables and write-back lanes of idle slots target it.
+
+
+class PoolExhausted(RuntimeError):
+    pass
+
+
+def page_words(n_layers: int, page_size: int, n_kv_heads: int, hd: int,
+               dtype) -> int:
+    return cipher.words_for((n_layers, page_size, n_kv_heads, hd), dtype)
+
+
+def page_tag_count(n_words: int, chunk_words: int) -> int:
+    """Divisor-aligned chunk count — mirrors mac.block_tags chunking."""
+    n = (n_words + chunk_words - 1) // chunk_words
+    while n_words % n:
+        n += 1
+    return n
+
+
+def _page_mac_key(base_key: jax.Array, nonce: jax.Array) -> jax.Array:
+    """Nonce-bound MAC key: replaying a page's old (ct, tags) fails."""
+    y0, y1 = cipher.threefry2x32(base_key, jnp.asarray(nonce, jnp.uint32),
+                                 jnp.asarray(KV_MAC_DOMAIN, jnp.uint32))
+    return jnp.stack([y0, y1])
+
+
+def seal_page(k_page: jax.Array, v_page: jax.Array, base_key: jax.Array,
+              nonce: jax.Array, chunk_words: int):
+    """Seal one KV page under a tenant key. Returns (kct, vct, ktags, vtags).
+
+    k_page/v_page: [n_layers, page_size, K, hd] plaintext.  vmappable over a
+    leading page axis (per-page nonces / keys become vectors).
+    """
+    nonce = jnp.asarray(nonce, jnp.uint32)
+    kk = cipher.derive_key(base_key, KV_K_DOMAIN)
+    vk = cipher.derive_key(base_key, KV_V_DOMAIN)
+    kct = cipher.seal_bits(k_page, kk, nonce)
+    vct = cipher.seal_bits(v_page, vk, nonce)
+    mk = _page_mac_key(base_key, nonce)
+    ktags = mac.block_tags(kct.reshape(-1), mk, chunk_words, KV_K_DOMAIN)
+    vtags = mac.block_tags(vct.reshape(-1), mk, chunk_words, KV_V_DOMAIN)
+    return kct, vct, ktags, vtags
+
+
+def unseal_page(kct: jax.Array, vct: jax.Array, ktags: jax.Array,
+                vtags: jax.Array, base_key: jax.Array, nonce: jax.Array,
+                dtype, chunk_words: int):
+    """Verify + decrypt one page. Returns (k_page, v_page, ok).
+
+    ``ok`` is a traced bool — callers gate outputs on it per *sequence* so a
+    tampered page poisons exactly the requests whose page table contains it.
+    """
+    nonce = jnp.asarray(nonce, jnp.uint32)
+    mk = _page_mac_key(base_key, nonce)
+    ok_k = jnp.all(mac.verify_block_tags(kct.reshape(-1), mk, chunk_words,
+                                         ktags, KV_K_DOMAIN))
+    ok_v = jnp.all(mac.verify_block_tags(vct.reshape(-1), mk, chunk_words,
+                                         vtags, KV_V_DOMAIN))
+    kk = cipher.derive_key(base_key, KV_K_DOMAIN)
+    vk = cipher.derive_key(base_key, KV_V_DOMAIN)
+    k = cipher.unseal_bits(kct, kk, nonce, dtype)
+    v = cipher.unseal_bits(vct, vk, nonce, dtype)
+    return k, v, ok_k & ok_v
+
+
+def bitcast_page(k_page: jax.Array, v_page: jax.Array):
+    """Protection-off path: shape-preserving bitcast, no keystream, no tags."""
+    udt = cipher.uint_dtype_for(k_page.dtype)
+    return (jax.lax.bitcast_convert_type(k_page, udt),
+            jax.lax.bitcast_convert_type(v_page, udt))
+
+
+@dataclasses.dataclass
+class PagedKVPool:
+    """Free-list allocator + device-resident page arrays.
+
+    Page 0 is reserved as scratch; allocations hand out distinct pages, so
+    two live requests never share a physical page and the in-graph write-back
+    scatter has no index collisions among active lanes.
+    """
+    n_pages: int
+    page_size: int
+    n_layers: int
+    n_kv_heads: int
+    hd: int
+    dtype: object
+    chunk_words: int = 128
+    sealed: bool = True
+
+    def __post_init__(self):
+        shape = (self.n_pages, self.n_layers, self.page_size,
+                 self.n_kv_heads, self.hd)
+        udt = cipher.uint_dtype_for(self.dtype)
+        pw = page_words(self.n_layers, self.page_size, self.n_kv_heads,
+                        self.hd, self.dtype)
+        self.n_tags = (page_tag_count(pw, self.chunk_words)
+                       if self.sealed else 1)
+        self.k_ct = jnp.zeros(shape, udt)
+        self.v_ct = jnp.zeros(shape, udt)
+        self.k_tags = jnp.zeros((self.n_pages, self.n_tags), jnp.uint32)
+        self.v_tags = jnp.zeros((self.n_pages, self.n_tags), jnp.uint32)
+        self.nonces = jnp.zeros((self.n_pages,), jnp.uint32)
+        self.keys = jnp.zeros((self.n_pages, 2), jnp.uint32)
+        self._free = deque(range(1, self.n_pages))
+        self._owner: dict[int, str] = {}
+        self.stats = {"allocs": 0, "frees": 0, "peak_live": 0,
+                      "alloc_failures": 0}
+
+    # -- allocator -------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_pages(self) -> int:
+        return self.n_pages - 1 - len(self._free)
+
+    def alloc(self, n: int, owner: str, key_words, nonces) -> list[int]:
+        """Take ``n`` pages for ``owner``; brand them with the owner's key
+        words and fresh per-page nonces.  Raises PoolExhausted if short."""
+        if n > len(self._free):
+            self.stats["alloc_failures"] += 1
+            raise PoolExhausted(f"need {n} pages, {len(self._free)} free")
+        pages = [self._free.popleft() for _ in range(n)]
+        idx = jnp.asarray(pages, jnp.int32)
+        kw = jnp.broadcast_to(jnp.asarray(key_words, jnp.uint32), (n, 2))
+        self.keys = self.keys.at[idx].set(kw)
+        self.nonces = self.nonces.at[idx].set(
+            jnp.asarray(nonces, jnp.uint32))
+        for p in pages:
+            self._owner[p] = owner
+        self.stats["allocs"] += n
+        self.stats["peak_live"] = max(self.stats["peak_live"], self.live_pages)
+        return pages
+
+    def free(self, pages: list[int]) -> None:
+        """Return pages to the free list; un-brand them so a stale page table
+        entry can never verify against a past tenant's data."""
+        if not pages:
+            return
+        idx = jnp.asarray(pages, jnp.int32)
+        self.keys = self.keys.at[idx].set(0)
+        self.nonces = self.nonces.at[idx].set(0)
+        self.k_tags = self.k_tags.at[idx].set(0)
+        self.v_tags = self.v_tags.at[idx].set(0)
+        for p in pages:
+            self._owner.pop(p, None)
+            self._free.append(p)
+        self.stats["frees"] += len(pages)
+
+    def owner_of(self, page: int) -> str | None:
+        return self._owner.get(page)
+
+    def pages_of(self, owner: str) -> list[int]:
+        return [p for p, o in self._owner.items() if o == owner]
+
+    # -- device state ----------------------------------------------------
+    def write_pages(self, pages: list[int], kct, vct, ktags, vtags) -> None:
+        """Install freshly sealed page contents (e.g. after prefill)."""
+        idx = jnp.asarray(pages, jnp.int32)
+        self.k_ct = self.k_ct.at[idx].set(kct)
+        self.v_ct = self.v_ct.at[idx].set(vct)
+        self.k_tags = self.k_tags.at[idx].set(ktags)
+        self.v_tags = self.v_tags.at[idx].set(vtags)
+
+    def arrays(self) -> tuple:
+        """The pool state threaded through the jitted decode step."""
+        return (self.k_ct, self.v_ct, self.k_tags, self.v_tags,
+                self.nonces, self.keys)
+
+    def update_arrays(self, arrays: tuple) -> None:
+        (self.k_ct, self.v_ct, self.k_tags, self.v_tags,
+         self.nonces, self.keys) = arrays

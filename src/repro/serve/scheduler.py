@@ -1,0 +1,181 @@
+"""Continuous-batching scheduler over the paged sealed KV pool.
+
+Replaces the fixed-slot engine's equal-length-prompt restriction: requests of
+any length join a FIFO admission queue, claim a free *slot* (a lane of the
+jitted decode step) plus enough KV pages for prompt + generation, run one
+per-request prefill, and then ride the shared decode step until they finish —
+joining and leaving at step granularity while other requests keep decoding
+(vLLM-style continuous batching, here with per-tenant sealing).
+
+Admission reserves a request's full page budget up front, so a running
+request can never be starved of pages mid-decode by later arrivals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import numpy as np
+
+from .engine import TOKEN_POISON, PagedEngine
+from .kv_pager import SCRATCH_PAGE, PagedKVPool
+from .sessions import SessionManager
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tenant_id: str
+    prompt: np.ndarray              # [S] int32
+    max_new: int
+    status: str = "queued"          # queued | running | done | poisoned
+    tokens_out: list = dataclasses.field(default_factory=list)
+    slot: int = -1
+    pages: list = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_first: float = 0.0            # first-token (prefill) completion time
+    t_done: float = 0.0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def seq_len(self) -> int:
+        """KV positions currently stored (prompt + emitted - 1 pending)."""
+        return self.prompt_len + max(0, len(self.tokens_out) - 1)
+
+    @property
+    def finished(self) -> bool:
+        return self.status in ("done", "poisoned")
+
+
+class Scheduler:
+    def __init__(self, engine: PagedEngine, pool: PagedKVPool,
+                 sessions: SessionManager, max_slots: int, max_pages: int):
+        self.engine = engine
+        self.pool = pool
+        self.sessions = sessions
+        self.max_slots = max_slots
+        self.max_pages = max_pages
+        self.queue: deque[Request] = deque()
+        self.slots: list[Request | None] = [None] * max_slots
+        self.requests: dict[int, Request] = {}
+        self._next_rid = 1
+
+    # -- submission ------------------------------------------------------
+    def required_pages(self, req: Request) -> int:
+        ps = self.pool.page_size
+        return -(-(req.prompt_len + req.max_new) // ps)
+
+    def submit(self, tenant_id: str, prompt: np.ndarray, max_new: int) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        req = Request(rid=self._next_rid, tenant_id=tenant_id, prompt=prompt,
+                      max_new=max_new, t_submit=time.monotonic())
+        if self.required_pages(req) > self.max_pages:
+            raise ValueError(
+                f"request needs {self.required_pages(req)} pages "
+                f"> max_pages_per_seq={self.max_pages}")
+        self._next_rid += 1
+        self.requests[req.rid] = req
+        self.queue.append(req)
+        return req.rid
+
+    @property
+    def active(self) -> list[Request]:
+        return [r for r in self.slots if r is not None]
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not self.active
+
+    # -- one scheduling step --------------------------------------------
+    def step(self) -> dict:
+        events = {"admitted": [], "emitted": [], "finished": [],
+                  "poisoned": []}
+        self._admit(events)
+        self._decode(events)
+        return events
+
+    def _admit(self, events: dict) -> None:
+        """Fill free slots from the queue head (FIFO, full page reservation)."""
+        for slot in range(self.max_slots):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            n_pages = self.required_pages(req)
+            if n_pages > self.pool.free_pages:
+                break  # head-of-line blocks: admission order is FIFO
+            self.queue.popleft()
+            sess = self.sessions.get(req.tenant_id)
+            # rotation point: tenant has no sealed pages in flight right now
+            if (self.sessions.rotation_due(req.tenant_id)
+                    and not self.pool.pages_of(req.tenant_id)):
+                self.sessions.rotate(req.tenant_id)
+            ch = sess.channel
+            ps = self.pool.page_size
+            nonces = [ch.fresh_nonce(span=ps + 2) for _ in range(n_pages)]
+            req.pages = self.pool.alloc(n_pages, req.tenant_id,
+                                        ch.key_words, nonces)
+            req.slot = slot
+            req.status = "running"
+            self.slots[slot] = req
+            # Rule 3: the tenant's own channel MACs its prefill descriptor
+            tok = ch.launch(
+                self.engine.prefill,
+                {"op": "paged_prefill", "rid": req.rid,
+                 "tenant": req.tenant_id, "len": req.prompt_len,
+                 "pages": list(req.pages)},
+                req.prompt, req.pages)
+            self.sessions.note_launch(req.tenant_id)
+            req.t_first = time.monotonic()
+            self._record_token(req, tok, events)
+
+    def _decode(self, events: dict) -> None:
+        live = [r for r in self.slots if r is not None]
+        if not live:
+            return
+        B, P = self.max_slots, self.max_pages
+        ps = self.pool.page_size
+        tokens = np.zeros((B,), np.int32)
+        seq_lens = np.zeros((B,), np.int32)
+        active = np.zeros((B,), bool)
+        page_tables = np.full((B, P), SCRATCH_PAGE, np.int32)
+        write_pp = np.full((B,), SCRATCH_PAGE, np.int32)
+        for r in live:
+            b = r.slot
+            tokens[b] = r.tokens_out[-1]
+            seq_lens[b] = r.seq_len
+            active[b] = True
+            page_tables[b, :len(r.pages)] = r.pages
+            write_pp[b] = r.pages[r.seq_len // ps]
+        tok, ok = self.engine.decode_step(tokens, seq_lens, active,
+                                          page_tables, write_pp)
+        for r in live:
+            self.sessions.note_launch(r.tenant_id)
+            self._record_token(r, int(tok[r.slot]), events,
+                               ok=bool(ok[r.slot]))
+
+    def _record_token(self, req: Request, tok: int, events: dict,
+                      ok: bool = True) -> None:
+        req.tokens_out.append(tok)
+        events["emitted"].append((req.rid, tok))
+        if not ok or tok == TOKEN_POISON:
+            req.status = "poisoned"
+            events["poisoned"].append(req.rid)
+            self._evict(req)
+        elif len(req.tokens_out) >= req.max_new:
+            req.status = "done"
+            events["finished"].append(req.rid)
+            self._evict(req)
+        elif req.status == "running" and len(req.tokens_out) == 1:
+            events["admitted"].append(req.rid)
+
+    def _evict(self, req: Request) -> None:
+        req.t_done = time.monotonic()
+        if req.slot >= 0:
+            self.slots[req.slot] = None
+            req.slot = -1
+        self.pool.free(req.pages)
+        req.pages = []

@@ -1,0 +1,104 @@
+"""Per-tenant session management for the multi-tenant serving gateway.
+
+One trusted accelerator (one CA enrollment, one endorsement key) serves many
+mutually-distrusting tenants.  Each tenant runs the full paper §3.2 handshake
+— attestation against the manufacturer CA, then signed ephemeral DH — and
+gets its *own* SecureChannel: an independent session key, a process-unique
+session id (so nonce lanes never overlap; see core/channel.py) and its own
+Rule-3 register files.
+
+Key rotation: after ``rotate_every`` protected launches attributed to a
+tenant, the next time that tenant is idle (no sealed pages in flight) the
+manager re-runs the DH exchange with the accelerator and installs the new
+key via ``SecureChannel.rekey`` — the epoch bump makes old-key nonces dead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from ..core import trust
+from ..core.channel import SecureChannel
+from ..core.policy import SecurityConfig
+from ..core.registers import DeviceRegisterFile, HostRegisterFile
+
+
+@dataclasses.dataclass
+class TenantSession:
+    tenant_id: str
+    channel: SecureChannel
+    created_at: float
+    launches: int = 0        # protected launches since the last rotation
+    rotations: int = 0
+
+
+class SessionManager:
+    """Attestation cache + rotation policy over one shared accelerator."""
+
+    def __init__(self, device_id: str = "tpu-0",
+                 config: SecurityConfig | None = None,
+                 rotate_every: int = 0):
+        """rotate_every: rotate a tenant's key after this many launches
+        (0 disables rotation)."""
+        self.config = config or SecurityConfig()
+        self.rotate_every = rotate_every
+        self._ca = trust.ManufacturerCA()
+        self._accel = trust.TrustedAccelerator(device_id, self._ca)
+        self._sessions: dict[str, TenantSession] = {}
+
+    # -- handshake -------------------------------------------------------
+    def _handshake(self) -> tuple:
+        """Run attestation + signed DH against the shared accelerator."""
+        host = trust.HostProgram(self._ca)
+        kbytes = host.establish(self._accel)
+        return trust.session_key_to_words(kbytes), kbytes
+
+    def register(self, tenant_id: str) -> TenantSession:
+        """Idempotent: first call runs the handshake, later calls hit the
+        session cache."""
+        if tenant_id in self._sessions:
+            return self._sessions[tenant_id]
+        key_words, key_bytes = self._handshake()
+        channel = SecureChannel(
+            key_words=key_words, key_bytes=key_bytes, config=self.config,
+            host_regs=HostRegisterFile(key=key_bytes),
+            device_regs=DeviceRegisterFile(key=key_bytes))
+        sess = TenantSession(tenant_id=tenant_id, channel=channel,
+                             created_at=time.monotonic())
+        self._sessions[tenant_id] = sess
+        return sess
+
+    def get(self, tenant_id: str) -> TenantSession:
+        if tenant_id not in self._sessions:
+            raise KeyError(f"tenant {tenant_id!r} has no session "
+                           "(call register first)")
+        return self._sessions[tenant_id]
+
+    def channel(self, tenant_id: str) -> SecureChannel:
+        return self.get(tenant_id).channel
+
+    @property
+    def tenants(self) -> list[str]:
+        return list(self._sessions)
+
+    # -- launch accounting + rotation -----------------------------------
+    def note_launch(self, tenant_id: str, n: int = 1) -> None:
+        self.get(tenant_id).launches += n
+
+    def rotation_due(self, tenant_id: str) -> bool:
+        if not self.rotate_every:
+            return False
+        return self.get(tenant_id).launches >= self.rotate_every
+
+    def rotate(self, tenant_id: str) -> SecureChannel:
+        """Fresh handshake -> rekey the tenant's channel in place.
+
+        Callers must ensure the tenant has no sealed state under the old key
+        (the gateway rotates only tenants with zero live pages).
+        """
+        sess = self.get(tenant_id)
+        key_words, key_bytes = self._handshake()
+        sess.channel.rekey(key_words, key_bytes)
+        sess.launches = 0
+        sess.rotations += 1
+        return sess.channel

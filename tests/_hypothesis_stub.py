@@ -1,0 +1,73 @@
+"""Minimal drop-in for the ``hypothesis`` API used by this test suite.
+
+The tier-1 container does not ship hypothesis; rather than skipping whole
+modules (they contain plenty of non-property tests too), test files fall back
+to this shim:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_stub import given, settings, strategies as st
+
+The shim runs each property test over a small deterministic sample set
+(boundaries + seeded random draws) instead of hypothesis's adaptive search.
+Only the surface this suite uses is implemented: ``st.integers``,
+``@settings(...)`` and keyword-form ``@given(...)``.
+"""
+from __future__ import annotations
+
+import random
+
+
+class _Strategy:
+    def __init__(self, examples):
+        self._examples = list(examples)
+
+    def examples(self):
+        return self._examples
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value=0, max_value=2**31 - 1):
+        rng = random.Random(0xC0FFEE ^ min_value ^ max_value)
+        vals = {min_value, max_value,
+                min(max_value, min_value + 1),
+                (min_value + max_value) // 2}
+        vals.update(rng.randint(min_value, max_value) for _ in range(8))
+        return _Strategy(sorted(vals))
+
+
+st = strategies
+
+
+def settings(**_kwargs):
+    def deco(f):
+        return f
+    return deco
+
+
+def given(**named_strategies):
+    """Keyword-only @given: run the test over zipped cycled sample pools."""
+    names = list(named_strategies)
+
+    def deco(f):
+        pools = [named_strategies[n].examples() for n in names]
+
+        def property_runner():
+            n_examples = 2 * max(len(p) for p in pools)
+            for i in range(n_examples):
+                kw = {n: pools[j][(i * (j + 1)) % len(pools[j])]
+                      for j, n in enumerate(names)}
+                f(**kw)
+
+        # No functools.wraps: __wrapped__ would leak the strategy params into
+        # the signature pytest sees and it would hunt for fixtures of those
+        # names.  Copy only the identity attributes.
+        property_runner.__name__ = f.__name__
+        property_runner.__qualname__ = f.__qualname__
+        property_runner.__doc__ = f.__doc__
+        property_runner.__module__ = f.__module__
+        return property_runner
+
+    return deco

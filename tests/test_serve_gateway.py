@@ -1,0 +1,228 @@
+"""Multi-tenant serving gateway: paged sealed KV cache, continuous batching,
+per-tenant key isolation, page tamper containment, session rotation.
+
+Tests in this module share one gateway (jit graphs are per-engine, and the
+paged decode graph is the expensive part) and are order-dependent: the
+equivalence test runs first on a clean pool, the tamper and rotation tests
+reuse the warm gateway afterwards.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.channel import SecureChannel
+from repro.models import registry
+from repro.serve import (PagedKVPool, PoolExhausted, SecureGateway,
+                         ServeEngine, SessionManager, TOKEN_POISON)
+from repro.serve import kv_pager
+
+PAGE = 8          # page_size
+MAXP = 4          # max pages per sequence -> T = 32
+N_NEW = 5
+
+PROMPT_LENS = {"alice": 6, "bob": 9, "carol": 12}
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.get_config("granite-3-2b", smoke=True)
+    params = registry.get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    prompts = {t: rng.randint(0, cfg.vocab, n).astype(np.int32)
+               for t, n in PROMPT_LENS.items()}
+    return cfg, params, prompts
+
+
+@pytest.fixture(scope="module")
+def gateway(setup):
+    cfg, params, _ = setup
+    return SecureGateway(cfg, params, security="trusted", max_slots=3,
+                         page_size=PAGE, n_pages=32, max_pages_per_seq=MAXP)
+
+
+@pytest.fixture(scope="module")
+def reference(setup):
+    """Fixed-slot engine outputs, one request at a time (plain channel)."""
+    cfg, params, prompts = setup
+    eng = ServeEngine(cfg=cfg, params=params, channel=SecureChannel.insecure(),
+                      max_len=PAGE * MAXP)
+    return {t: eng.generate({"tokens": p[None]}, n_new=N_NEW)[0]
+            for t, p in prompts.items()}
+
+
+# ---------------------------------------------------------------------------
+# pager unit tests (host-side, cheap)
+# ---------------------------------------------------------------------------
+
+def test_pool_alloc_free_reuse():
+    pool = PagedKVPool(n_pages=8, page_size=4, n_layers=2, n_kv_heads=2,
+                       hd=8, dtype=jnp.float32)
+    a = pool.alloc(3, "A", np.array([1, 2], np.uint32), [10, 11, 12])
+    b = pool.alloc(2, "B", np.array([3, 4], np.uint32), [20, 21])
+    assert len(set(a)) == 3 and kv_pager.SCRATCH_PAGE not in a
+    assert not set(a) & set(b)
+    assert {pool.owner_of(p) for p in a} == {"A"}
+    np.testing.assert_array_equal(np.asarray(pool.keys)[a[0]], [1, 2])
+    assert int(pool.nonces[a[1]]) == 11
+    # free + reuse: the allocator recycles returned pages and un-brands them
+    pool.free(a)
+    assert pool.owner_of(a[0]) is None
+    np.testing.assert_array_equal(np.asarray(pool.keys)[a[0]], [0, 0])
+    c = pool.alloc(4, "C", np.array([5, 6], np.uint32), [30, 31, 32, 33])
+    assert set(c) & set(a)                   # freed pages get recycled
+    assert not set(c) & set(b)               # ...but never B's live pages
+    with pytest.raises(PoolExhausted):
+        pool.alloc(5, "D", np.array([7, 8], np.uint32), [0] * 5)
+    assert pool.stats["allocs"] == 9 and pool.stats["frees"] == 3
+
+
+def test_page_seal_roundtrip_tamper_replay(key):
+    kp = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 2, 16), jnp.float32)
+    vp = jax.random.normal(jax.random.PRNGKey(2), (2, 4, 2, 16), jnp.float32)
+    kct, vct, ktags, vtags = kv_pager.seal_page(kp, vp, key, 7, 64)
+    k2, v2, ok = kv_pager.unseal_page(kct, vct, ktags, vtags, key, 7,
+                                      jnp.float32, 64)
+    assert bool(ok)
+    np.testing.assert_array_equal(np.asarray(kp), np.asarray(k2))
+    np.testing.assert_array_equal(np.asarray(vp), np.asarray(v2))
+    # single-bit tamper in the ciphertext -> page fails verification
+    bad = kct.at[0, 0, 0, 0].add(1)
+    _, _, ok_t = kv_pager.unseal_page(bad, vct, ktags, vtags, key, 7,
+                                      jnp.float32, 64)
+    assert not bool(ok_t)
+    # replay: the page was re-sealed under nonce 8; presenting the stale
+    # (ct, tags) pair against the current nonce fails (nonce-bound MAC key)
+    _, _, ok_r = kv_pager.unseal_page(kct, vct, ktags, vtags, key, 8,
+                                      jnp.float32, 64)
+    assert not bool(ok_r)
+
+
+def test_cross_tenant_key_isolation(key):
+    """Tenant B's channel key can neither read nor forge A's sealed pages."""
+    key_b = jnp.array([0xB0B, 0xB0B2], jnp.uint32)
+    kp = jax.random.normal(jax.random.PRNGKey(3), (2, 4, 2, 16), jnp.float32)
+    kct, vct, ktags, vtags = kv_pager.seal_page(kp, kp, key, 5, 64)
+    kb, _, ok = kv_pager.unseal_page(kct, vct, ktags, vtags, key_b, 5,
+                                     jnp.float32, 64)
+    assert not bool(ok)                       # B cannot authenticate A's page
+    assert not np.array_equal(np.asarray(kb), np.asarray(kp))  # nor decrypt
+
+
+# ---------------------------------------------------------------------------
+# gateway end-to-end
+# ---------------------------------------------------------------------------
+
+def test_three_tenants_mixed_lengths_match_fixed_slot(setup, gateway, reference):
+    cfg, params, prompts = setup
+    rids = {t: gateway.submit(t, p, max_new=N_NEW)
+            for t, p in prompts.items()}
+    # one step: everyone admitted (prefill) + first decode at mixed lengths
+    gateway.step()
+    keyset = {}
+    for t, rid in rids.items():
+        req = gateway.scheduler.requests[rid]
+        assert req.pages, "request should hold pages mid-flight"
+        kw = np.asarray(gateway.pool.keys)[req.pages[0]]
+        np.testing.assert_array_equal(
+            kw, gateway.sessions.channel(t).key_words)   # branded w/ own key
+        keyset[t] = tuple(kw)
+    assert len(set(keyset.values())) == 3    # three distinct tenant keys
+    gateway.drain()
+    for t, rid in rids.items():
+        out = gateway.collect(rid)
+        assert gateway.status(rid) == "done"
+        np.testing.assert_array_equal(out, reference[t])
+    m = gateway.metrics()
+    assert m["tokens"] == 3 * N_NEW and m["tok_per_s"] > 0
+    assert m["p95_token_ms"] >= m["p50_token_ms"] > 0
+    assert gateway.pool.live_pages == 0      # all pages back in the free list
+
+
+def test_tampered_page_poisons_only_owner(setup, gateway, reference):
+    cfg, params, prompts = setup
+    rid_a = gateway.submit("alice", prompts["alice"], max_new=N_NEW)
+    rid_b = gateway.submit("bob", prompts["bob"], max_new=N_NEW)
+    gateway.step()                            # both admitted + one decode
+    req_a = gateway.scheduler.requests[rid_a]
+    page = req_a.pages[0]                     # a page holding alice's prompt
+    gateway.pool.k_ct = gateway.pool.k_ct.at[page, 0, 0, 0, 0].add(1)
+    gateway.drain()
+    assert gateway.status(rid_a) == "poisoned"
+    assert gateway.scheduler.requests[rid_a].tokens_out[-1] == TOKEN_POISON
+    # bob is untouched: finishes and matches the clean reference run
+    assert gateway.status(rid_b) == "done"
+    np.testing.assert_array_equal(gateway.collect(rid_b), reference["bob"])
+    assert gateway.pool.live_pages == 0       # poisoned request was evicted
+
+
+def test_rotation_under_traffic_preserves_output(setup, gateway, reference):
+    """Rotate alice's key between requests; results are unchanged and the
+    rotation is visible in session state."""
+    cfg, params, prompts = setup
+    gateway.sessions.rotate_every = 2
+    try:
+        sess = gateway.sessions.get("alice")
+        old_key = np.asarray(sess.channel.key_words).copy()
+        old_epoch = sess.channel.epoch
+        sess.launches = 10                    # force: rotation is due
+        rid = gateway.submit("alice", prompts["alice"], max_new=N_NEW)
+        gateway.drain()
+        assert sess.rotations >= 1
+        assert not np.array_equal(np.asarray(sess.channel.key_words), old_key)
+        assert sess.channel.epoch > old_epoch
+        np.testing.assert_array_equal(gateway.collect(rid),
+                                      reference["alice"])
+    finally:
+        gateway.sessions.rotate_every = 0
+
+
+# ---------------------------------------------------------------------------
+# sessions + nonce domains
+# ---------------------------------------------------------------------------
+
+def test_session_manager_per_tenant_keys_and_rotation():
+    mgr = SessionManager(rotate_every=3)
+    a = mgr.register("a")
+    b = mgr.register("b")
+    assert mgr.register("a") is a            # idempotent (attestation cached)
+    assert a.channel.key_bytes != b.channel.key_bytes
+    assert a.channel.session_id != b.channel.session_id
+    for _ in range(3):
+        mgr.note_launch("a")
+    assert mgr.rotation_due("a") and not mgr.rotation_due("b")
+    old = a.channel.key_bytes
+    mgr.rotate("a")
+    assert a.channel.key_bytes != old and a.rotations == 1
+    assert not mgr.rotation_due("a")         # launch counter reset
+
+
+def test_nonce_domain_separation_between_channels():
+    """Two channels (mis)configured with the SAME key never share a nonce."""
+    from repro.core.policy import SecurityConfig
+    kw = np.array([1, 2], np.uint32)
+    kb = b"k" * 32
+
+    def mk():
+        return SecureChannel(key_words=kw, key_bytes=kb,
+                             config=SecurityConfig())
+
+    ch1, ch2 = mk(), mk()
+    n1 = {ch1.fresh_nonce() for _ in range(200)}
+    n2 = {ch2.fresh_nonce() for _ in range(200)}
+    assert len(n1) == len(n2) == 200
+    assert not n1 & n2                       # session-id lanes are disjoint
+
+
+def test_nonce_epoch_rolls_on_counter_wrap():
+    from repro.core.policy import SecurityConfig
+    from repro.core.trust import SecurityError
+    ch = SecureChannel(key_words=np.array([1, 2], np.uint32),
+                       key_bytes=b"k" * 32, config=SecurityConfig())
+    a = ch.fresh_nonce(span=60_000)
+    b = ch.fresh_nonce(span=60_000)          # would overflow -> new epoch
+    assert (b >> 16 & 0xFF) == (a >> 16 & 0xFF) + 1
+    assert (b >> 24) == (a >> 24)            # same session lane
+    with pytest.raises(SecurityError):
+        ch.fresh_nonce(span=1 << 17)         # span larger than an epoch
