@@ -4,13 +4,18 @@
   micro        seal/unseal throughput, chunk-size trade-off (paper §3.3.2),
                trust-establishment latency (§3.2)
   sealed_lm    Table-1 analogue measured on an LM (none/ctr/trusted)
-  serve_gateway  multi-tenant continuous-batching gateway: tok/s + p50/p95
-               per-token latency for mixed-length traffic (off vs trusted)
+  serve_gateway  multi-tenant preemptive gateway: tok/s + p50/p95 per-token
+               latency, swap-out/in counts and pool occupancy for steady and
+               preemption-heavy traffic (off vs trusted)
   roofline     §Roofline three-term table for all 40 cells (needs
                results/dryrun.jsonl from repro.launch.dryrun)
+
+``--smoke`` runs every benchmark at minimum size — the CI job that keeps the
+perf scripts from silently rotting.
 """
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 
@@ -18,6 +23,11 @@ sys.path.insert(0, os.path.dirname(__file__))
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimum-size pass over every benchmark (CI)")
+    args = ap.parse_args()
+
     import table1_vta
     import micro
     import sealed_lm
@@ -30,7 +40,10 @@ def main() -> None:
     print("=" * 72)
     sealed_lm.run()
     print("=" * 72)
-    serve_gateway.run()
+    if args.smoke:
+        serve_gateway.run(requests=3, max_new=3, slots=2)
+    else:
+        serve_gateway.run()
     print("=" * 72)
     if os.path.exists("results/dryrun.jsonl"):
         import roofline

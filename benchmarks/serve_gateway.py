@@ -1,18 +1,49 @@
 """Gateway serving benchmark — mixed-length multi-tenant traffic.
 
-Reports throughput (tok/s) and per-token latency percentiles (p50/p95) for
-the continuous-batching gateway over the sealed paged KV pool, at the three
-paper protection levels:
+Reports throughput (tok/s), per-token latency percentiles (p50/p95) and
+preemption/occupancy counters for the continuous-batching gateway over the
+sealed paged KV pool, at the paper protection levels:
 
     off      — plain pool, no handshake sealing (paper's "VTA" row)
     trusted  — per-tenant CTR + per-page MAC + freshness ("VTA-trusted")
 
+Two scenarios per mode:
+
+    steady     all requests share one priority class (no preemption)
+    preempt    a burst of high-priority interactive requests lands while
+               low-priority batch requests hold every slot — the scheduler
+               swaps sealed KV through the SealedStore host tier and back
+
 Smoke-sized model so the numbers measure the *protocol machinery* (seal /
-unseal / MAC per page, variable-occupancy gather) rather than raw FLOPs.
+unseal / MAC per page, variable-occupancy gather, verbatim swap copies)
+rather than raw FLOPs.
 """
 from __future__ import annotations
 
 import numpy as np
+
+
+def _submit_steady(gw, vocab, tenants, requests, max_new, seed):
+    rng = np.random.RandomState(seed)
+    for i in range(requests):
+        plen = int(rng.randint(4, 17))
+        gw.submit(f"tenant-{i % tenants}",
+                  rng.randint(0, vocab, plen), max_new=max_new)
+
+
+def _submit_preempt(gw, vocab, tenants, requests, max_new, seed):
+    """Low-priority batch first (fills all slots), then a high-pri burst."""
+    rng = np.random.RandomState(seed)
+    n_hi = max(1, requests // 3)
+    for i in range(requests - n_hi):
+        plen = int(rng.randint(8, 17))
+        gw.submit(f"batch-{i % tenants}", rng.randint(0, vocab, plen),
+                  max_new=max_new, priority=0)
+    gw.step()                              # batch traffic occupies the slots
+    for i in range(n_hi):
+        plen = int(rng.randint(4, 9))
+        gw.submit(f"live-{i % tenants}", rng.randint(0, vocab, plen),
+                  max_new=max_new, priority=5)
 
 
 def run(arch: str = "granite-3-2b", tenants: int = 3, requests: int = 6,
@@ -27,31 +58,32 @@ def run(arch: str = "granite-3-2b", tenants: int = 3, requests: int = 6,
     params = registry.get_model(cfg).init(jax.random.PRNGKey(0), cfg)
     print(f"serve_gateway: {arch} (smoke), {tenants} tenants, "
           f"{requests} mixed-length requests, {max_new} new tokens each")
-    header = (f"{'mode':>8} | {'tok/s':>8} | {'p50 ms':>8} | {'p95 ms':>8} | "
-              f"{'ttft ms':>8} | {'pages peak':>10}")
+    header = (f"{'mode':>8} | {'scenario':>8} | {'tok/s':>8} | {'p50 ms':>8} "
+              f"| {'p95 ms':>8} | {'ttft ms':>8} | {'pre-ttft':>8} | "
+              f"{'swaps':>7} | {'occ %':>6} | {'pages':>5}")
     print(header)
     print("-" * len(header))
+    scenarios = (("steady", _submit_steady, dict(n_pages=64)),
+                 ("preempt", _submit_preempt, dict(n_pages=64, slots=2)))
     for mode in ("off", "trusted"):
-        gw = SecureGateway(cfg, params, security=mode, max_slots=slots,
-                           page_size=8, n_pages=64, max_pages_per_seq=4)
-        rng = np.random.RandomState(0)
-        for i in range(requests):
-            plen = int(rng.randint(4, 17))
-            gw.submit(f"tenant-{i % tenants}",
-                      rng.randint(0, cfg.vocab, plen), max_new=max_new)
-        # warm-up pass compiled the graphs; re-run fresh traffic for timing
-        gw.drain()
-        gw.reset_metrics()
-        rng = np.random.RandomState(1)
-        for i in range(requests):
-            plen = int(rng.randint(4, 17))
-            gw.submit(f"tenant-{i % tenants}",
-                      rng.randint(0, cfg.vocab, plen), max_new=max_new)
-        gw.drain()
-        m = gw.metrics()
-        print(f"{mode:>8} | {m['tok_per_s']:8.1f} | "
-              f"{m['p50_token_ms']:8.1f} | {m['p95_token_ms']:8.1f} | "
-              f"{m['mean_ttft_ms']:8.1f} | {m['kv_pages_peak']:10d}")
+        for name, submit, knobs in scenarios:
+            gw = SecureGateway(cfg, params, security=mode,
+                               max_slots=knobs.get("slots", slots),
+                               page_size=8, n_pages=knobs["n_pages"],
+                               max_pages_per_seq=4)
+            # warm-up pass compiles the graphs; re-run fresh traffic for timing
+            submit(gw, cfg.vocab, tenants, requests, max_new, seed=0)
+            gw.drain()
+            gw.reset_metrics()
+            submit(gw, cfg.vocab, tenants, requests, max_new, seed=1)
+            gw.drain()
+            m = gw.metrics()
+            swaps = f"{m['swap_outs']}/{m['swap_ins']}"
+            print(f"{mode:>8} | {name:>8} | {m['tok_per_s']:8.1f} | "
+                  f"{m['p50_token_ms']:8.1f} | {m['p95_token_ms']:8.1f} | "
+                  f"{m['mean_ttft_ms']:8.1f} | {m['preempted_ttft_ms']:8.1f} "
+                  f"| {swaps:>7} | {m['pool_occupancy_pct']:6.1f} | "
+                  f"{m['kv_pages_peak']:5d}")
 
 
 if __name__ == "__main__":

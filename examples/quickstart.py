@@ -7,6 +7,9 @@
    silently computing on attacker-controlled data.
 5. Multi-tenant serving: two tenants with their own session keys share one
    gateway (continuous batching over a sealed, paged KV pool).
+6. Oversubscription: more requests than physical KV pages — high-priority
+   traffic preempts, sealed pages swap verbatim into the host-tier
+   SealedStore and back, and everything still completes.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -72,6 +75,30 @@ def main():
     print(f"{m['tokens']} tokens at {m['tok_per_s']:.1f} tok/s over "
           f"{len(m['tokens_per_tenant'])} tenant sessions "
           f"(KV pages peak {m['kv_pages_peak']})")
+
+    # -- 6. oversubscription via preemptive swap --------------------------
+    # A pool of 4 usable pages, but 6 requests that reserve 2 pages each
+    # (12 > 4).  Batch traffic admits first; interactive (priority 5)
+    # requests preempt it — the victims' sealed pages move *verbatim*
+    # (ciphertext + tags, never decrypted) into the SealedStore host tier,
+    # and swap back in later to resume mid-sequence, bitwise identical.
+    gw2 = SecureGateway(scfg, sparams, security="trusted",
+                        max_slots=2, page_size=8, n_pages=5,
+                        max_pages_per_seq=2)
+    rids = [gw2.submit("batch", rng.randint(0, scfg.vocab, 9), max_new=4)
+            for _ in range(2)]
+    gw2.step()     # batch requests now hold every slot and page
+    rids += [gw2.submit("live", rng.randint(0, scfg.vocab, 5), max_new=4,
+                        priority=5) for _ in range(2)]
+    rids += [gw2.submit("batch", rng.randint(0, scfg.vocab, 9), max_new=4)
+             for _ in range(2)]
+    gw2.drain()
+    m2 = gw2.metrics()
+    print(f"oversubscribed: {len(rids)} requests over "
+          f"{gw2.pool.n_pages - 1} pages -> "
+          f"{[gw2.status(r) for r in rids].count('done')}/{len(rids)} done, "
+          f"swaps out/in {m2['swap_outs']}/{m2['swap_ins']}, "
+          f"occupancy {m2['pool_occupancy_pct']:.0f}%")
 
 if __name__ == "__main__":
     main()

@@ -50,8 +50,9 @@ _EPOCH_SPACE = 1 << _EPOCH_BITS
 _session_ids = itertools.count(1)
 
 # per-leaf nonce stride used by sealed.seal_tree — reseal() may bump each
-# leaf's nonce up to stride-1 times before lanes would touch.
-TREE_LEAF_STRIDE = 131
+# leaf's nonce up to stride-1 times before lanes would touch.  The counting
+# guard that enforces this budget lives next to the stride (core/sealed.py).
+TREE_LEAF_STRIDE = sealed_lib.TREE_LEAF_STRIDE
 
 
 def poison_unless(ok: jax.Array, tree):
@@ -131,6 +132,21 @@ class SecureChannel:
             raise trust.SecurityError(
                 "nonce epoch space exhausted — rotate the session key")
 
+    def advance_epoch(self, floor: int) -> None:
+        """Raise the key epoch to at least ``floor`` (freshness floor).
+
+        Used when restoring warm state: a restarted session must never
+        re-walk nonce lanes a previous incarnation already spent, so the
+        epoch jumps past the last persisted one.  No-op if already past.
+        """
+        if self.epoch >= floor:
+            return
+        if floor >= _EPOCH_SPACE:
+            raise trust.SecurityError(
+                "nonce epoch space exhausted — rotate the session key")
+        self.epoch = floor
+        self._nonce_counter = 0
+
     def fresh_nonce(self, span: int = 1) -> int:
         """Reserve ``span`` consecutive counter slots; return the first nonce.
 
@@ -178,6 +194,22 @@ class SecureChannel:
         span = TREE_LEAF_STRIDE * (n_leaves + 1)
         return sealed_lib.seal_tree(tree, self.jkey, spec,
                                     self.fresh_nonce(span=span))
+
+    def refresh_tree(self, sealed_tree, spec: SealedSpec | None = None):
+        """Re-seal a tree under fresh nonce lanes (epoch bump).
+
+        The escape hatch the reseal-count guard (sealed.ResealCounter) forces
+        before per-leaf lanes can touch: verify + decrypt every leaf, bump to
+        a fresh epoch, and seal again with brand-new leaf lanes.  Raises on
+        integrity failure — a tampered tree is never re-signed.
+        """
+        spec = spec or self.config.weights
+        tree, ok = sealed_lib.unseal_tree(sealed_tree, self.jkey)
+        if not bool(ok):
+            raise trust.SecurityError(
+                "refresh_tree: sealed tree failed integrity verification")
+        self.bump_epoch()
+        return self.upload_tree(tree, spec)
 
     def download(self, st) -> jax.Array:
         """Untrusted HBM -> host enclave: unseal + verify (strict)."""

@@ -111,6 +111,54 @@ def reseal(st: SealedTensor, x: jax.Array, key: jax.Array) -> SealedTensor:
 
 
 # ---------------------------------------------------------------------------
+# nonce-lane budget: seal_tree spaces leaf nonces TREE_LEAF_STRIDE apart and
+# reseal bumps +1 per step, so leaf i's lane walks toward leaf i+1's base.
+# More than TREE_LEAF_STRIDE - 1 resealings under one key would *reuse
+# keystream across leaves* (counter-mode two-time pad).  The nonce is traced
+# data inside jitted steps, so the budget is enforced host-side: one
+# ResealCounter per sealed tree, bumped once per reseal_tree application.
+# ---------------------------------------------------------------------------
+
+TREE_LEAF_STRIDE = 131
+MAX_TREE_RESEALS = TREE_LEAF_STRIDE - 1
+
+
+class NonceLaneExhausted(RuntimeError):
+    """The next reseal would walk a leaf's nonce into the next leaf's lane."""
+
+
+@dataclasses.dataclass
+class ResealCounter:
+    """Host-side guard for a sealed tree's per-leaf nonce lanes.
+
+    ``note()`` before (or as) each reseal; once the budget is spent the guard
+    raises instead of letting lanes touch — the owner must then re-seal under
+    a fresh epoch (e.g. ``SecureChannel.refresh_tree``) and ``reset()``.
+    """
+    limit: int = MAX_TREE_RESEALS
+    count: int = 0
+
+    @property
+    def remaining(self) -> int:
+        return self.limit - self.count
+
+    @property
+    def exhausted(self) -> bool:
+        return self.count >= self.limit
+
+    def note(self, n: int = 1) -> None:
+        if self.count + n > self.limit:
+            raise NonceLaneExhausted(
+                f"reseal #{self.count + n} would cross the {self.limit}-"
+                "reseal nonce-lane budget (keystream reuse across leaves) — "
+                "bump the epoch / re-seal the tree under fresh nonces first")
+        self.count += n
+
+    def reset(self) -> None:
+        self.count = 0
+
+
+# ---------------------------------------------------------------------------
 # pytree-level helpers: seal/unseal whole parameter trees
 # ---------------------------------------------------------------------------
 
@@ -119,9 +167,10 @@ def is_sealed(x) -> bool:
 
 
 def seal_tree(tree, key: jax.Array, spec: SealedSpec, nonce_base: int = 0):
-    """Seal every array leaf of a pytree, with distinct per-leaf nonces."""
+    """Seal every array leaf of a pytree, with distinct per-leaf nonces
+    spaced TREE_LEAF_STRIDE apart (the ResealCounter budget above)."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
-    sealed = [seal(x, key, np.uint32(nonce_base + 131 * i), spec)
+    sealed = [seal(x, key, np.uint32(nonce_base + TREE_LEAF_STRIDE * i), spec)
               for i, x in enumerate(leaves)]
     return jax.tree_util.tree_unflatten(treedef, sealed)
 

@@ -4,8 +4,11 @@
         --tenants 3 --requests 6 --max-new 12
 
 Each tenant runs its own §3.2 attestation handshake; requests have mixed
-prompt lengths and share one sealed paged KV pool.  ``--engine fixed`` keeps
-the legacy equal-length fixed-slot path for comparison.
+prompt lengths and share one sealed paged KV pool.  ``--hi-every N`` marks
+every Nth request as high priority (class 5): when slots or pages run out it
+preempts running low-priority requests, whose sealed KV swaps verbatim into
+the SealedStore host tier and back.  ``--engine fixed`` keeps the legacy
+equal-length fixed-slot path for comparison.
 """
 from __future__ import annotations
 
@@ -32,20 +35,30 @@ def _run_gateway(cfg, params, args) -> None:
         tenant = f"tenant-{i % args.tenants}"
         plen = int(rng.randint(args.min_prompt, args.max_prompt + 1))
         prompt = rng.randint(0, cfg.vocab, plen)
-        rids.append(gw.submit(tenant, prompt, max_new=args.max_new))
+        prio = 5 if (args.hi_every and (i + 1) % args.hi_every == 0) else 0
+        rids.append(gw.submit(tenant, prompt, max_new=args.max_new,
+                              priority=prio))
     gw.drain()
     for rid in rids:
         out = gw.collect(rid)
         req = gw.scheduler.requests[rid]
-        print(f"  req {rid} [{req.tenant_id}, prompt {req.prompt_len:3d}] "
+        swaps = f" swaps {req.swaps_out}/{req.swaps_in}" if req.swaps_out \
+            else ""
+        print(f"  req {rid} [{req.tenant_id}, prompt {req.prompt_len:3d}, "
+              f"prio {req.priority}] "
               f"-> {out[:8].tolist()}{'...' if len(out) > 8 else ''} "
-              f"({gw.status(rid)})")
+              f"({gw.status(rid)}{swaps})")
     m = gw.metrics()
     print(f"{m['tokens']} tokens in {m['elapsed_s']:.2f} s "
           f"({m['tok_per_s']:.1f} tok/s); "
           f"p50 {m['p50_token_ms']:.1f} ms  p95 {m['p95_token_ms']:.1f} ms  "
           f"ttft {m['mean_ttft_ms']:.1f} ms")
-    print(f"pages peak {m['kv_pages_peak']}  rotations {m['rotations']}  "
+    print(f"pages peak {m['kv_pages_peak']}  occupancy "
+          f"{m['pool_occupancy_pct']:.1f}%  swap out/in "
+          f"{m['swap_outs']}/{m['swap_ins']}  "
+          f"preempted {m['preempted_requests']} "
+          f"(ttft {m['preempted_ttft_ms']:.1f} ms)")
+    print(f"rotations {m['rotations']}  "
           f"launches verified: {m['launches_verified']}")
 
 
@@ -90,6 +103,8 @@ def main() -> None:
     ap.add_argument("--pages", type=int, default=64)
     ap.add_argument("--max-pages", type=int, default=4)
     ap.add_argument("--rotate-every", type=int, default=0)
+    ap.add_argument("--hi-every", type=int, default=0,
+                    help="every Nth request is high priority (0 = never)")
     ap.add_argument("--security", default="trusted", choices=("trusted", "off"))
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full", dest="smoke", action="store_false")

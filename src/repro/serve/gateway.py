@@ -7,11 +7,15 @@ mutually-distrusting tenants on one trusted accelerator:
     serve-step launch descriptors (Rule 3);
   * each tenant gets its own attested session (serve/sessions.py) whose key
     seals that tenant's KV pages in the shared pool (serve/kv_pager.py);
-  * a continuous-batching scheduler (serve/scheduler.py) interleaves
-    prefill and decode of mixed-length requests at variable occupancy.
+  * a preemptive priority-class scheduler (serve/scheduler.py) interleaves
+    prefill and decode of mixed-length requests at variable occupancy, and
+    swaps sealed KV of preempted requests into a host-tier SealedStore
+    (store/sealed_store.py) — so the pool can be oversubscribed: total
+    reserved pages may exceed physical pages and everything still completes.
 
-API: ``submit`` / ``step`` / ``collect`` (+ ``drain``), with throughput and
-latency metrics aggregated per gateway and per tenant.
+API: ``submit`` / ``step`` / ``collect`` (+ ``drain``), with throughput,
+latency, preemption and pool-occupancy metrics aggregated per gateway and
+per tenant.
 """
 from __future__ import annotations
 
@@ -20,6 +24,7 @@ import time
 import numpy as np
 
 from ..core.policy import SecurityConfig
+from ..store import SealedStore
 from .engine import PagedEngine
 from .kv_pager import PagedKVPool
 from .scheduler import Scheduler
@@ -32,12 +37,15 @@ class SecureGateway:
     def __init__(self, cfg, params, *, security: str = "trusted",
                  max_slots: int = 4, page_size: int = 8, n_pages: int = 64,
                  max_pages_per_seq: int = 4, rotate_every: int = 0,
-                 chunk_words: int = 128, device_id: str = "tpu-0"):
+                 chunk_words: int = 128, device_id: str = "tpu-0",
+                 store: SealedStore | None = None):
         self.cfg = cfg
         sec = (SecurityConfig() if security == "trusted"
                else SecurityConfig.off())
+        self.store = store if store is not None else SealedStore()
         self.sessions = SessionManager(device_id, config=sec,
-                                       rotate_every=rotate_every)
+                                       rotate_every=rotate_every,
+                                       store=self.store)
         provider = self.sessions.register(PROVIDER).channel
         sealed = sec.enabled
         params_dev = provider.upload_tree(params) if sealed else params
@@ -49,11 +57,14 @@ class SecureGateway:
             cfg=cfg, params=params_dev, channel=provider, pool=self.pool,
             max_slots=max_slots, max_pages=max_pages_per_seq)
         self.scheduler = Scheduler(self.engine, self.pool, self.sessions,
-                                   max_slots, max_pages_per_seq)
+                                   max_slots, max_pages_per_seq,
+                                   store=self.store)
         self._steps = 0
         self._t_start = time.monotonic()
         self._token_latency_ms: list[float] = []
         self._per_tenant: dict[str, int] = {}
+        self._occupancy_sum = 0.0
+        self._occupancy_steps = 0
         self._metrics_from_rid = 0
 
     def reset_metrics(self) -> None:
@@ -62,6 +73,10 @@ class SecureGateway:
         self._t_start = time.monotonic()
         self._token_latency_ms.clear()
         self._per_tenant.clear()
+        self._occupancy_sum = 0.0
+        self._occupancy_steps = 0
+        self.scheduler.swap_stats = {"swap_outs": 0, "swap_ins": 0,
+                                     "swapped_bytes": 0}
         self._metrics_from_rid = self.scheduler._next_rid
 
     # -- tenant + request lifecycle -------------------------------------
@@ -71,11 +86,16 @@ class SecureGateway:
             raise ValueError("reserved tenant id")
         return self.sessions.register(tenant_id)
 
-    def submit(self, tenant_id: str, prompt, max_new: int) -> int:
-        """Queue a generation request under the tenant's session. -> rid"""
+    def submit(self, tenant_id: str, prompt, max_new: int,
+               priority: int = 0) -> int:
+        """Queue a generation request under the tenant's session. -> rid
+
+        priority: higher classes may preempt running lower-class requests
+        (their sealed KV swaps out to the store and back — see scheduler).
+        """
         self.register_tenant(tenant_id)
         return self.scheduler.submit(tenant_id, np.asarray(prompt, np.int32),
-                                     max_new)
+                                     max_new, priority=priority)
 
     def step(self) -> dict:
         """Advance the engine one scheduling step (admit + decode + evict)."""
@@ -88,6 +108,9 @@ class SecureGateway:
              "queued": len(self.scheduler.queue), "active": active})
         dt_ms = (time.monotonic() - t0) * 1e3
         self._steps += 1
+        usable = max(1, self.pool.n_pages - 1)
+        self._occupancy_sum += self.pool.live_pages / usable
+        self._occupancy_steps += 1
         for rid, _tok in events["emitted"]:
             self._token_latency_ms.append(dt_ms)
             req = self.scheduler.requests[rid]
@@ -132,9 +155,14 @@ class SecureGateway:
         n_tok = len(lat)
         rotations = sum(s.rotations for s in
                         (self.sessions.get(t) for t in self.sessions.tenants))
-        ttfts = [(r.t_first - r.t_submit) * 1e3
-                 for r in self.scheduler.requests.values()
-                 if r.t_first > 0 and r.rid >= self._metrics_from_rid]
+        window = [r for r in self.scheduler.requests.values()
+                  if r.t_first > 0 and r.rid >= self._metrics_from_rid]
+        ttfts = [(r.t_first - r.t_submit) * 1e3 for r in window]
+        pre_ttfts = [(r.t_first - r.t_submit) * 1e3 for r in window
+                     if r.swaps_out > 0]
+        swaps = self.scheduler.swap_stats
+        occ = (self._occupancy_sum / self._occupancy_steps
+               if self._occupancy_steps else 0.0)
         return {
             "steps": self._steps,
             "tokens": n_tok,
@@ -143,6 +171,13 @@ class SecureGateway:
             "p50_token_ms": pct(0.50),
             "p95_token_ms": pct(0.95),
             "mean_ttft_ms": sum(ttfts) / len(ttfts) if ttfts else 0.0,
+            "preempted_ttft_ms": (sum(pre_ttfts) / len(pre_ttfts)
+                                  if pre_ttfts else 0.0),
+            "preempted_requests": len(pre_ttfts),
+            "swap_outs": swaps["swap_outs"],
+            "swap_ins": swaps["swap_ins"],
+            "swapped_bytes": swaps["swapped_bytes"],
+            "pool_occupancy_pct": 100.0 * occ,
             "tokens_per_tenant": dict(self._per_tenant),
             "kv_pages_peak": self.pool.stats["peak_live"],
             "kv_pages_free": self.pool.free_pages,

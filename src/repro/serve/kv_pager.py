@@ -212,6 +212,24 @@ class PagedKVPool:
         self.k_tags = self.k_tags.at[idx].set(ktags)
         self.v_tags = self.v_tags.at[idx].set(vtags)
 
+    def export_pages(self, pages: list[int]) -> tuple[dict, np.ndarray]:
+        """Verbatim host copies of sealed pages for the spill store.
+
+        Returns ({k_ct, v_ct, k_tags, v_tags}, nonces).  The chunk dict is
+        exactly what may leave for the untrusted tier (Rules 1/2: already
+        ciphertext + tags); the nonces are NOT part of it — the caller must
+        retain them on the trusted side, because the nonce-bound page MAC is
+        what binds a later swap-in to this exact page version.
+        """
+        idx = np.asarray(pages, np.int32)
+        chunks = {
+            "k_ct": np.asarray(self.k_ct)[idx],
+            "v_ct": np.asarray(self.v_ct)[idx],
+            "k_tags": np.asarray(self.k_tags)[idx],
+            "v_tags": np.asarray(self.v_tags)[idx],
+        }
+        return chunks, np.asarray(self.nonces)[idx].copy()
+
     def arrays(self) -> tuple:
         """The pool state threaded through the jitted decode step."""
         return (self.k_ct, self.v_ct, self.k_tags, self.v_tags,

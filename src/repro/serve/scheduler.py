@@ -1,14 +1,27 @@
-"""Continuous-batching scheduler over the paged sealed KV pool.
+"""Preemptive priority-class scheduler over the paged sealed KV pool.
 
-Replaces the fixed-slot engine's equal-length-prompt restriction: requests of
-any length join a FIFO admission queue, claim a free *slot* (a lane of the
-jitted decode step) plus enough KV pages for prompt + generation, run one
-per-request prefill, and then ride the shared decode step until they finish —
-joining and leaving at step granularity while other requests keep decoding
-(vLLM-style continuous batching, here with per-tenant sealing).
+Requests of any length join an admission queue ordered by (priority desc,
+arrival), claim a free *slot* (a lane of the jitted decode step) plus enough
+KV pages for prompt + generation, run one per-request prefill, and then ride
+the shared decode step until they finish — joining and leaving at step
+granularity while other requests keep decoding (vLLM-style continuous
+batching, here with per-tenant sealing).
 
 Admission reserves a request's full page budget up front, so a running
-request can never be starved of pages mid-decode by later arrivals.
+request can never be starved of pages mid-decode by later arrivals.  What
+replaced the old FIFO head-of-line block is **preemption**: when the best
+waiter cannot be admitted (no free slot, or not enough free pages) and some
+running request has strictly lower priority, the scheduler swaps that victim
+out — its sealed pages move *verbatim* (ciphertext + tags, no decrypt) into
+the SealedStore host tier, the pages return to the pool, and the victim
+rejoins the queue.  When resources free up it swaps back in and resumes
+decode mid-sequence, bitwise-identical to an uninterrupted run.
+
+Freshness across the swap: the per-page nonces are retained in the request's
+``swap_nonces`` (modeling enclave-resident bookkeeping — they never enter
+the untrusted store).  The page MAC key is nonce-bound, so a tampered or
+stale (replayed) store object fails verification on the next decode step and
+NaN-poisons only the owning request.
 """
 from __future__ import annotations
 
@@ -18,9 +31,16 @@ from collections import deque
 
 import numpy as np
 
+from ..store import SealedStore, StoreError, choose_victim
 from .engine import TOKEN_POISON, PagedEngine
 from .kv_pager import SCRATCH_PAGE, PagedKVPool
 from .sessions import SessionManager
+
+SWAP_KIND = "kv_swap"
+
+
+def swap_object_id(rid: int) -> str:
+    return f"kvswap/{rid}"
 
 
 @dataclasses.dataclass
@@ -29,13 +49,18 @@ class Request:
     tenant_id: str
     prompt: np.ndarray              # [S] int32
     max_new: int
-    status: str = "queued"          # queued | running | done | poisoned
+    priority: int = 0               # higher preempts lower
+    status: str = "queued"          # queued | running | swapped | done | poisoned
     tokens_out: list = dataclasses.field(default_factory=list)
     slot: int = -1
     pages: list = dataclasses.field(default_factory=list)
     t_submit: float = 0.0
     t_first: float = 0.0            # first-token (prefill) completion time
+    t_last: float = 0.0             # last progress (token / admission) time
     t_done: float = 0.0
+    swaps_out: int = 0
+    swaps_in: int = 0
+    swap_nonces: np.ndarray | None = None   # enclave-retained page nonces
 
     @property
     def prompt_len(self) -> int:
@@ -53,30 +78,39 @@ class Request:
 
 class Scheduler:
     def __init__(self, engine: PagedEngine, pool: PagedKVPool,
-                 sessions: SessionManager, max_slots: int, max_pages: int):
+                 sessions: SessionManager, max_slots: int, max_pages: int,
+                 store: SealedStore | None = None):
         self.engine = engine
         self.pool = pool
         self.sessions = sessions
         self.max_slots = max_slots
         self.max_pages = max_pages
+        self.store = store if store is not None else SealedStore()
         self.queue: deque[Request] = deque()
         self.slots: list[Request | None] = [None] * max_slots
         self.requests: dict[int, Request] = {}
         self._next_rid = 1
+        self.swap_stats = {"swap_outs": 0, "swap_ins": 0,
+                           "swapped_bytes": 0}
 
     # -- submission ------------------------------------------------------
     def required_pages(self, req: Request) -> int:
         ps = self.pool.page_size
         return -(-(req.prompt_len + req.max_new) // ps)
 
-    def submit(self, tenant_id: str, prompt: np.ndarray, max_new: int) -> int:
+    def submit(self, tenant_id: str, prompt: np.ndarray, max_new: int,
+               priority: int = 0) -> int:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
+        now = time.monotonic()
         req = Request(rid=self._next_rid, tenant_id=tenant_id, prompt=prompt,
-                      max_new=max_new, t_submit=time.monotonic())
-        if self.required_pages(req) > self.max_pages:
+                      max_new=max_new, priority=priority, t_submit=now,
+                      t_last=now)
+        usable = self.pool.n_pages - 1          # page 0 is scratch
+        if self.required_pages(req) > min(self.max_pages, usable):
             raise ValueError(
-                f"request needs {self.required_pages(req)} pages "
-                f"> max_pages_per_seq={self.max_pages}")
+                f"request needs {self.required_pages(req)} pages > "
+                f"min(max_pages_per_seq={self.max_pages}, pool={usable}) — "
+                "it could never be admitted")
         self._next_rid += 1
         self.requests[req.rid] = req
         self.queue.append(req)
@@ -90,48 +124,178 @@ class Scheduler:
     def idle(self) -> bool:
         return not self.queue and not self.active
 
+    def tenant_quiescent(self, tenant_id: str) -> bool:
+        """No sealed state in flight: no live pages *and* no swapped-out KV
+        (a rotation would orphan store objects sealed under the old key)."""
+        if self.pool.pages_of(tenant_id):
+            return False
+        return not any(r.status == "swapped" and r.tenant_id == tenant_id
+                       for r in self.requests.values())
+
     # -- one scheduling step --------------------------------------------
     def step(self) -> dict:
         events = {"admitted": [], "emitted": [], "finished": [],
-                  "poisoned": []}
+                  "poisoned": [], "preempted": [], "resumed": []}
         self._admit(events)
         self._decode(events)
         return events
 
-    def _admit(self, events: dict) -> None:
-        """Fill free slots from the queue head (FIFO, full page reservation)."""
-        for slot in range(self.max_slots):
-            if self.slots[slot] is not None or not self.queue:
-                continue
-            req = self.queue[0]
-            n_pages = self.required_pages(req)
-            if n_pages > self.pool.free_pages:
-                break  # head-of-line blocks: admission order is FIFO
-            self.queue.popleft()
-            sess = self.sessions.get(req.tenant_id)
-            # rotation point: tenant has no sealed pages in flight right now
-            if (self.sessions.rotation_due(req.tenant_id)
-                    and not self.pool.pages_of(req.tenant_id)):
-                self.sessions.rotate(req.tenant_id)
-            ch = sess.channel
-            ps = self.pool.page_size
-            nonces = [ch.fresh_nonce(span=ps + 2) for _ in range(n_pages)]
-            req.pages = self.pool.alloc(n_pages, req.tenant_id,
-                                        ch.key_words, nonces)
-            req.slot = slot
-            req.status = "running"
-            self.slots[slot] = req
-            # Rule 3: the tenant's own channel MACs its prefill descriptor
-            tok = ch.launch(
-                self.engine.prefill,
-                {"op": "paged_prefill", "rid": req.rid,
-                 "tenant": req.tenant_id, "len": req.prompt_len,
-                 "pages": list(req.pages)},
-                req.prompt, req.pages)
-            self.sessions.note_launch(req.tenant_id)
-            req.t_first = time.monotonic()
-            self._record_token(req, tok, events)
+    # -- admission + preemption -----------------------------------------
+    def _next_waiter(self) -> Request | None:
+        if not self.queue:
+            return None
+        return min(self.queue,
+                   key=lambda r: (-r.priority, r.t_submit, r.rid))
 
+    def _free_slot(self) -> int | None:
+        for slot in range(self.max_slots):
+            if self.slots[slot] is None:
+                return slot
+        return None
+
+    def _admit(self, events: dict) -> None:
+        """Admit waiters in priority order; preempt lower-priority running
+        requests when admission stalls on slots or pages."""
+        while True:
+            req = self._next_waiter()
+            if req is None:
+                return
+            n_pages = self.required_pages(req)
+            slot = self._free_slot()
+            if slot is None or n_pages > self.pool.free_pages:
+                # feasibility first: preempting is two full sealed-page
+                # copies for the victim, so never swap anyone out unless
+                # evicting the eligible class actually admits the waiter
+                eligible = [r for r in self.active
+                            if r.priority < req.priority]
+                reclaimable = sum(len(r.pages) for r in eligible)
+                if ((slot is None and not eligible)
+                        or self.pool.free_pages + reclaimable < n_pages):
+                    return      # wait: swapping now would be futile
+                victim = choose_victim(self.active, req.priority)
+                self._swap_out(victim, events)
+                continue        # re-evaluate with the freed slot/pages
+            self.queue.remove(req)
+            if req.status == "swapped":
+                self._swap_in(req, slot, events)
+            else:
+                self._admit_fresh(req, slot, events)
+
+    def _admit_fresh(self, req: Request, slot: int, events: dict) -> None:
+        n_pages = self.required_pages(req)
+        sess = self.sessions.get(req.tenant_id)
+        # rotation point: tenant has no sealed state in flight right now
+        if (self.sessions.rotation_due(req.tenant_id)
+                and self.tenant_quiescent(req.tenant_id)):
+            self.sessions.rotate(req.tenant_id)
+        ch = sess.channel
+        ps = self.pool.page_size
+        nonces = [ch.fresh_nonce(span=ps + 2) for _ in range(n_pages)]
+        req.pages = self.pool.alloc(n_pages, req.tenant_id,
+                                    ch.key_words, nonces)
+        req.slot = slot
+        req.status = "running"
+        self.slots[slot] = req
+        # Rule 3: the tenant's own channel MACs its prefill descriptor
+        tok = ch.launch(
+            self.engine.prefill,
+            {"op": "paged_prefill", "rid": req.rid,
+             "tenant": req.tenant_id, "len": req.prompt_len,
+             "pages": list(req.pages)},
+            req.prompt, req.pages)
+        self.sessions.note_launch(req.tenant_id)
+        req.t_first = time.monotonic()
+        self._record_token(req, tok, events)
+
+    def _swap_out(self, victim: Request, events: dict) -> None:
+        """Move a running request's sealed pages into the host-tier store.
+
+        The ciphertext and chunk tags copy *verbatim* — nothing is decrypted.
+        The per-page nonces stay on the trusted side (victim.swap_nonces):
+        they are what binds the store bytes to this exact page version, so a
+        tampered or replayed store object fails the nonce-bound page MAC at
+        swap-in and poisons only this request.
+        """
+        pages = list(victim.pages)
+        chunks, victim.swap_nonces = self.pool.export_pages(pages)
+        victim.swaps_out += 1
+        ch = self.sessions.channel(victim.tenant_id)
+        self.store.put(
+            swap_object_id(victim.rid), victim.tenant_id, chunks,
+            key_bytes=ch.key_bytes, kind=SWAP_KIND, pinned=True,
+            freshness=victim.swaps_out, nonce_epoch=ch.epoch,
+            meta={"rid": victim.rid, "n_pages": len(pages),
+                  "seq_len": victim.seq_len,
+                  "tokens_emitted": len(victim.tokens_out)})
+        self.swap_stats["swap_outs"] += 1
+        self.swap_stats["swapped_bytes"] += sum(c.nbytes
+                                                for c in chunks.values())
+        self.slots[victim.slot] = None
+        victim.slot = -1
+        self.pool.free(victim.pages)
+        victim.pages = []
+        victim.status = "swapped"
+        self.queue.append(victim)
+        events["preempted"].append(victim.rid)
+
+    def _swap_in(self, req: Request, slot: int, events: dict) -> None:
+        """Bring a swapped request back: fresh physical pages, store bytes
+        installed verbatim, retained nonces re-branded — then decode resumes
+        mid-sequence with no prefill.
+
+        verify=False: the store is untrusted, so its host-side hashes prove
+        nothing here.  The binding check is the in-graph page MAC against the
+        retained nonces on the next decode step.  A store that destroys the
+        object outright (deleted / renamed / reshaped chunks) is the same
+        attacker with a blunter instrument — it poisons this request, never
+        the gateway.
+        """
+        chunks = self._fetch_swap_chunks(req)
+        if chunks is None:
+            self._poison_unreadable(req, events)
+            return
+        n_pages = len(req.swap_nonces)
+        req.pages = self.pool.alloc(
+            n_pages, req.tenant_id,
+            self.sessions.channel(req.tenant_id).key_words, req.swap_nonces)
+        self.pool.write_pages(req.pages, chunks["k_ct"], chunks["v_ct"],
+                              chunks["k_tags"], chunks["v_tags"])
+        self.store.delete(swap_object_id(req.rid))
+        req.swaps_in += 1
+        self.swap_stats["swap_ins"] += 1
+        req.slot = slot
+        req.status = "running"
+        req.t_last = time.monotonic()
+        self.slots[slot] = req
+        events["resumed"].append(req.rid)
+
+    def _fetch_swap_chunks(self, req: Request) -> dict | None:
+        """Fetch + shape-check a swap object; None if the store mangled it."""
+        try:
+            chunks, _ = self.store.get(swap_object_id(req.rid), verify=False)
+        except StoreError:
+            return None
+        n = len(req.swap_nonces)
+        p = self.pool
+        page_shape = (n, p.n_layers, p.page_size, p.n_kv_heads, p.hd)
+        want = {"k_ct": (page_shape, p.k_ct.dtype),
+                "v_ct": (page_shape, p.v_ct.dtype),
+                "k_tags": ((n, p.n_tags), p.k_tags.dtype),
+                "v_tags": ((n, p.n_tags), p.v_tags.dtype)}
+        for name, (shape, dtype) in want.items():
+            if (name not in chunks or chunks[name].shape != shape
+                    or chunks[name].dtype != dtype):
+                return None
+        return chunks
+
+    def _poison_unreadable(self, req: Request, events: dict) -> None:
+        req.tokens_out.append(TOKEN_POISON)
+        req.status = "poisoned"
+        events["emitted"].append((req.rid, TOKEN_POISON))
+        events["poisoned"].append(req.rid)
+        self._evict(req)
+
+    # -- decode ----------------------------------------------------------
     def _decode(self, events: dict) -> None:
         live = [r for r in self.slots if r is not None]
         if not live:
@@ -160,6 +324,7 @@ class Scheduler:
     def _record_token(self, req: Request, tok: int, events: dict,
                       ok: bool = True) -> None:
         req.tokens_out.append(tok)
+        req.t_last = time.monotonic()
         events["emitted"].append((req.rid, tok))
         if not ok or tok == TOKEN_POISON:
             req.status = "poisoned"
@@ -179,3 +344,5 @@ class Scheduler:
             req.slot = -1
         self.pool.free(req.pages)
         req.pages = []
+        if self.store.exists(swap_object_id(req.rid)):
+            self.store.delete(swap_object_id(req.rid))

@@ -8,9 +8,17 @@ session id (so nonce lanes never overlap; see core/channel.py) and its own
 Rule-3 register files.
 
 Key rotation: after ``rotate_every`` protected launches attributed to a
-tenant, the next time that tenant is idle (no sealed pages in flight) the
-manager re-runs the DH exchange with the accelerator and installs the new
-key via ``SecureChannel.rekey`` — the epoch bump makes old-key nonces dead.
+tenant, the next time that tenant is idle (no sealed pages in flight, no
+swapped-out KV) the manager re-runs the DH exchange with the accelerator and
+installs the new key via ``SecureChannel.rekey`` — the epoch bump makes
+old-key nonces dead.
+
+Warm state: when a SealedStore is attached, per-tenant bookkeeping (launch
+counter, rotation count, last nonce epoch) persists as small store objects.
+A re-registered tenant restores its counters and — critically — advances its
+channel's nonce epoch past the recorded one, so a gateway restart can never
+re-walk nonce lanes the previous incarnation already spent.  The warm state
+holds no secrets (keys come from a fresh handshake every time).
 """
 from __future__ import annotations
 
@@ -21,6 +29,14 @@ from ..core import trust
 from ..core.channel import SecureChannel
 from ..core.policy import SecurityConfig
 from ..core.registers import DeviceRegisterFile, HostRegisterFile
+from ..store import SealedStore, StoreError
+
+WARM_KIND = "session_warm"
+_WARM_PERSIST_EVERY = 32        # persist counters every N launches
+
+
+def warm_object_id(tenant_id: str) -> str:
+    return f"session/{tenant_id}"
 
 
 @dataclasses.dataclass
@@ -37,14 +53,17 @@ class SessionManager:
 
     def __init__(self, device_id: str = "tpu-0",
                  config: SecurityConfig | None = None,
-                 rotate_every: int = 0):
+                 rotate_every: int = 0,
+                 store: SealedStore | None = None):
         """rotate_every: rotate a tenant's key after this many launches
-        (0 disables rotation)."""
+        (0 disables rotation).  store: optional warm-state backing tier."""
         self.config = config or SecurityConfig()
         self.rotate_every = rotate_every
+        self.store = store
         self._ca = trust.ManufacturerCA()
         self._accel = trust.TrustedAccelerator(device_id, self._ca)
         self._sessions: dict[str, TenantSession] = {}
+        self._warm_seq = 0      # monotone freshness for warm-state puts
 
     # -- handshake -------------------------------------------------------
     def _handshake(self) -> tuple:
@@ -55,7 +74,8 @@ class SessionManager:
 
     def register(self, tenant_id: str) -> TenantSession:
         """Idempotent: first call runs the handshake, later calls hit the
-        session cache."""
+        session cache.  With a store attached, a returning tenant restores
+        its warm state (counters + a nonce-epoch floor)."""
         if tenant_id in self._sessions:
             return self._sessions[tenant_id]
         key_words, key_bytes = self._handshake()
@@ -65,6 +85,7 @@ class SessionManager:
             device_regs=DeviceRegisterFile(key=key_bytes))
         sess = TenantSession(tenant_id=tenant_id, channel=channel,
                              created_at=time.monotonic())
+        self._restore_warm_state(sess)
         self._sessions[tenant_id] = sess
         return sess
 
@@ -81,9 +102,51 @@ class SessionManager:
     def tenants(self) -> list[str]:
         return list(self._sessions)
 
+    # -- warm state (store-backed) ---------------------------------------
+    def _restore_warm_state(self, sess: TenantSession) -> None:
+        """Best-effort: the warm tier is untrusted bookkeeping (a fresh
+        handshake cannot verify a pre-restart HMAC), so anything malformed —
+        corrupt chunks, non-numeric counters, an epoch forged past the nonce
+        space — makes the session start cold instead of crashing register().
+        A forged-but-valid epoch only wastes epoch space, never reuses it."""
+        if self.store is None or not self.store.exists(
+                warm_object_id(sess.tenant_id)):
+            return
+        try:
+            _, manifest = self.store.get(warm_object_id(sess.tenant_id))
+            warm = manifest["meta"]
+            launches = int(warm.get("launches", 0))
+            rotations = int(warm.get("rotations", 0))
+            # never re-walk the previous incarnation's nonce lanes
+            sess.channel.advance_epoch(int(warm.get("epoch", 0)) + 1)
+        except (StoreError, trust.SecurityError, KeyError, TypeError,
+                ValueError):
+            return
+        sess.launches = max(0, launches)
+        sess.rotations = max(0, rotations)
+
+    def _persist_warm_state(self, sess: TenantSession) -> None:
+        if self.store is None:
+            return
+        base = self.store.manifest(warm_object_id(sess.tenant_id))
+        self._warm_seq = max(self._warm_seq + 1,
+                             (base["freshness"] + 1) if base else 0)
+        self.store.put(
+            warm_object_id(sess.tenant_id), sess.tenant_id, {},
+            kind=WARM_KIND, freshness=self._warm_seq,
+            nonce_epoch=sess.channel.epoch,
+            meta={"launches": sess.launches, "rotations": sess.rotations,
+                  "epoch": sess.channel.epoch})
+
     # -- launch accounting + rotation -----------------------------------
     def note_launch(self, tenant_id: str, n: int = 1) -> None:
-        self.get(tenant_id).launches += n
+        sess = self.get(tenant_id)
+        before = sess.launches
+        sess.launches += n
+        # persist when the counter crosses a threshold boundary (exact
+        # multiples would never fire for callers batching n > 1)
+        if sess.launches // _WARM_PERSIST_EVERY > before // _WARM_PERSIST_EVERY:
+            self._persist_warm_state(sess)
 
     def rotation_due(self, tenant_id: str) -> bool:
         if not self.rotate_every:
@@ -94,11 +157,13 @@ class SessionManager:
         """Fresh handshake -> rekey the tenant's channel in place.
 
         Callers must ensure the tenant has no sealed state under the old key
-        (the gateway rotates only tenants with zero live pages).
+        (the gateway rotates only quiescent tenants: zero live pages and
+        zero swapped-out KV objects).
         """
         sess = self.get(tenant_id)
         key_words, key_bytes = self._handshake()
         sess.channel.rekey(key_words, key_bytes)
         sess.launches = 0
         sess.rotations += 1
+        self._persist_warm_state(sess)
         return sess.channel

@@ -1,2 +1,3 @@
-from .trainer import make_train_step, seal_state, unseal_state_host  # noqa: F401
+from .trainer import (make_refresh_fn, make_train_step,  # noqa: F401
+                      refresh_sealed_state, seal_state, unseal_state_host)
 from . import checkpoint, fault  # noqa: F401

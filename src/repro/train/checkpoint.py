@@ -1,82 +1,60 @@
-"""Sealed checkpointing — ciphertext at rest, Merkle-rooted manifest, atomic.
+"""Sealed checkpointing over the SealedStore host tier.
 
-Checkpoint layout (one directory per step, atomically committed via rename):
+A checkpoint is one store object per step (`ckpt_<step>`), committed
+atomically; its chunks are the state's leaf arrays in keypath order
+(SealedTensor leaves stay ciphertext: sealing the state *is* checkpoint
+encryption) and its manifest carries per-chunk SHA-256, a Merkle root and an
+HMAC under the session key — the store-level integrity layer
+(store/sealed_store.py), verified strictly on restore.
+
+On-disk layout (same file names as the ad-hoc predecessor, but the
+manifest.json schema is the store's — old-schema checkpoints are rejected
+as corrupt, not silently read):
 
     ckpt_000042/
-      manifest.json     leaf index: keypath -> file, shape, dtype, sha256
-                        + merkle_root over sorted leaf hashes
-                        + hmac-sha256(manifest_core, K) signature
-      000000.npy ...    raw leaf arrays (SealedTensor leaves stay ciphertext:
-                        sealing the state *is* checkpoint encryption)
+      manifest.json     chunk index + merkle_root + hmac + meta
+      000000.npy ...    raw leaf arrays
 
-Restore verifies the manifest HMAC, every file hash, and (optionally)
-re-shards each leaf onto a target mesh — the elastic-restart path: a
-checkpoint written on a 16x16 mesh restores onto 2x16x16 (or a smoke mesh)
-by device_put with the new NamedShardings.
+Restore verifies everything, then (optionally) re-shards each leaf onto a
+target mesh — the elastic-restart path: a checkpoint written on a 16x16 mesh
+restores onto 2x16x16 (or a smoke mesh) by device_put with the new
+NamedShardings.
 """
 from __future__ import annotations
 
-import hashlib
-import hmac
-import json
 import os
-import shutil
-import tempfile
 
 import jax
 import numpy as np
+
+from ..store import SealedStore, StoreError
+
+TENANT = "_trainer"
+
+
+class CheckpointError(RuntimeError):
+    pass
+
+
+def _object_id(step: int) -> str:
+    return f"ckpt_{step:06d}"
 
 
 def _leafpath(kp) -> str:
     return jax.tree_util.keystr(kp)
 
 
-def _sha256(b: bytes) -> str:
-    return hashlib.sha256(b).hexdigest()
-
-
-def _merkle_root(hashes: list[str]) -> str:
-    level = [bytes.fromhex(h) for h in sorted(hashes)]
-    if not level:
-        return _sha256(b"")
-    while len(level) > 1:
-        if len(level) % 2:
-            level.append(level[-1])
-        level = [hashlib.sha256(level[i] + level[i + 1]).digest()
-                 for i in range(0, len(level), 2)]
-    return level[0].hex()
-
-
 def save(base_dir: str, step: int, state, key_bytes: bytes) -> str:
     """Atomically write a (possibly sealed) pytree checkpoint."""
-    os.makedirs(base_dir, exist_ok=True)
-    final = os.path.join(base_dir, f"ckpt_{step:06d}")
-    tmp = tempfile.mkdtemp(prefix=".tmp_ckpt_", dir=base_dir)
+    store = SealedStore(base_dir)
     leaves_kp = jax.tree_util.tree_flatten_with_path(state)[0]
-    entries, hashes = [], []
-    for i, (kp, leaf) in enumerate(leaves_kp):
-        arr = np.asarray(leaf)
-        fname = f"{i:06d}.npy"
-        np.save(os.path.join(tmp, fname), arr)
-        with open(os.path.join(tmp, fname), "rb") as f:
-            h = _sha256(f.read())
-        hashes.append(h)
-        entries.append({"key": _leafpath(kp), "file": fname,
-                        "shape": list(arr.shape), "dtype": str(arr.dtype),
-                        "sha256": h})
-    core = {"step": step, "leaves": entries, "merkle_root": _merkle_root(hashes)}
-    core_bytes = json.dumps(core, sort_keys=True).encode()
-    sig = hmac.new(key_bytes, core_bytes, hashlib.sha256).hexdigest()
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump({"core": core, "hmac": sig}, f, indent=1)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
-    return final
-
-
-class CheckpointError(RuntimeError):
-    pass
+    chunks = {f"{i:06d}": np.asarray(leaf)
+              for i, (_, leaf) in enumerate(leaves_kp)}
+    store.put(_object_id(step), TENANT, chunks, key_bytes=key_bytes,
+              kind="checkpoint", freshness=step,
+              meta={"step": step,
+                    "keys": [_leafpath(kp) for kp, _ in leaves_kp]})
+    return os.path.join(base_dir, _object_id(step))
 
 
 def restore(path: str, abstract_state, key_bytes: bytes, shardings=None):
@@ -85,32 +63,24 @@ def restore(path: str, abstract_state, key_bytes: bytes, shardings=None):
     shardings: optional pytree of jax.sharding.Sharding matching the state —
     the elastic-restart path (loads re-shard onto the provided mesh).
     """
-    with open(os.path.join(path, "manifest.json")) as f:
-        m = json.load(f)
-    core_bytes = json.dumps(m["core"], sort_keys=True).encode()
-    want = hmac.new(key_bytes, core_bytes, hashlib.sha256).hexdigest()
-    if not hmac.compare_digest(want, m["hmac"]):
-        raise CheckpointError("manifest HMAC mismatch (tampered checkpoint)")
-    entries = m["core"]["leaves"]
-    hashes = []
-    arrays = []
-    for e in entries:
-        p = os.path.join(path, e["file"])
-        with open(p, "rb") as f:
-            raw = f.read()
-        h = _sha256(raw)
-        if h != e["sha256"]:
-            raise CheckpointError(f"leaf {e['key']} hash mismatch")
-        hashes.append(h)
-        arrays.append(np.load(p))
-    if _merkle_root(hashes) != m["core"]["merkle_root"]:
-        raise CheckpointError("merkle root mismatch")
+    base_dir, object_id = os.path.split(os.path.normpath(path))
+    store = SealedStore(base_dir or ".")
+    try:
+        chunks, manifest = store.get(object_id, key_bytes=key_bytes,
+                                     verify=True)
+    except StoreError as e:
+        raise CheckpointError(str(e)) from e
+    except KeyError as e:
+        raise CheckpointError(
+            f"checkpoint {object_id!r} has a foreign/old manifest schema "
+            f"(missing {e})") from e
+    arrays = [chunks[name] for name in sorted(chunks)]
     treedef = jax.tree_util.tree_structure(abstract_state)
     state = jax.tree_util.tree_unflatten(treedef, arrays)
     if shardings is not None:
         state = jax.tree_util.tree_map(
             lambda x, s: jax.device_put(x, s), state, shardings)
-    return state, m["core"]["step"]
+    return state, manifest["meta"]["step"]
 
 
 def latest(base_dir: str):
@@ -121,3 +91,10 @@ def latest(base_dir: str):
     if not steps:
         return None
     return os.path.join(base_dir, f"ckpt_{steps[-1]:06d}"), steps[-1]
+
+
+def fsck(base_dir: str, key_bytes: bytes | None = None) -> dict:
+    """Store-level integrity sweep over every checkpoint in ``base_dir``."""
+    store = SealedStore(base_dir)
+    keys = ({TENANT: key_bytes} if key_bytes is not None else None)
+    return store.fsck(keys)

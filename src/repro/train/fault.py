@@ -15,6 +15,7 @@ from typing import Callable, Optional
 
 import jax
 
+from ..core.sealed import ResealCounter
 from . import checkpoint
 
 
@@ -62,17 +63,34 @@ class Supervisor:
     save_every: int = 10
     injector: Optional[FailureInjector] = None
     straggler: Optional[StragglerPolicy] = None
+    # Sealed-training nonce-lane budget: every step re-seals the state (+1
+    # per leaf lane), and seal_tree lanes are TREE_LEAF_STRIDE wide.  The
+    # guard counts resealings; when the budget is spent, refresh_fn must
+    # re-seal the state under a fresh epoch (keystream lanes reset) — with a
+    # guard but no refresh_fn, the loop fails closed (NonceLaneExhausted)
+    # rather than reuse keystream across leaves.
+    lane_guard: Optional[ResealCounter] = None
+    refresh_fn: Optional[Callable] = None       # state -> re-sealed state
 
     def run(self, state, n_steps: int, start_step: int = 0, log=None):
         log = log or (lambda *a: None)
         abstract = state
         step = start_step
         metrics = {}
-        events = {"failures": 0, "restarts": 0, "stragglers": 0, "saves": 0}
+        events = {"failures": 0, "restarts": 0, "stragglers": 0, "saves": 0,
+                  "lane_refreshes": 0}
         while step < n_steps:
             try:
                 if self.injector:
                     self.injector.check(step)
+                if self.lane_guard is not None:
+                    if self.lane_guard.exhausted and self.refresh_fn:
+                        state = self.refresh_fn(state)
+                        self.lane_guard.reset()
+                        events["lane_refreshes"] += 1
+                        log(f"step {step}: nonce-lane budget spent — state "
+                            "re-sealed under a fresh epoch")
+                    self.lane_guard.note()
                 t0 = time.perf_counter()
                 batch = self.batch_fn(step)
                 state, metrics = self.step_fn(state, batch)
@@ -88,6 +106,13 @@ class Supervisor:
                     events["saves"] += 1
             except NodeFailure as e:
                 events["failures"] += 1
+                if self.lane_guard is not None:
+                    # A restored checkpoint carries *older* leaf nonces than
+                    # the state we just lost, so the guard's count no longer
+                    # matches the lanes — force a refresh (fresh epoch) before
+                    # the next reseal rather than under-count and reuse
+                    # keystream.
+                    self.lane_guard.count = self.lane_guard.limit
                 log(f"FAILURE: {e}; restoring last checkpoint")
                 last = checkpoint.latest(self.ckpt_dir)
                 if last is None:

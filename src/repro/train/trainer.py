@@ -15,6 +15,7 @@ the pod trust boundary.
 from __future__ import annotations
 
 import functools
+import itertools
 from typing import Callable
 
 import jax
@@ -26,16 +27,49 @@ from ..core.policy import SecurityConfig
 from ..optim import AdamW, TrainState
 
 
-def seal_state(state: TrainState, key, sec: SecurityConfig) -> TrainState:
-    """Seal a TrainState's tensors for HBM residency (host-side, once)."""
+def seal_state(state: TrainState, key, sec: SecurityConfig,
+               nonce_base: int = 0) -> TrainState:
+    """Seal a TrainState's tensors for HBM residency (host-side, once).
+
+    nonce_base: offset added to every region's nonce lanes — the epoch-bump
+    hook for re-sealing after the reseal-count guard (core/sealed.py) spends
+    a tree's lane budget.  Callers refreshing must pass a base that clears
+    all previously used lanes (e.g. refresh_count << 20).
+    """
     if not sec.enabled:
         return state
+    nb = int(nonce_base)
     return TrainState(
         step=state.step,
-        params=sealed_lib.seal_tree(state.params, key, sec.weights, 1 << 8),
-        mu=sealed_lib.seal_tree(state.mu, key, sec.grads, 1 << 16),
-        nu=sealed_lib.seal_tree(state.nu, key, sec.grads, 1 << 17),
+        params=sealed_lib.seal_tree(state.params, key, sec.weights,
+                                    nb + (1 << 8)),
+        mu=sealed_lib.seal_tree(state.mu, key, sec.grads, nb + (1 << 16)),
+        nu=sealed_lib.seal_tree(state.nu, key, sec.grads, nb + (1 << 17)),
     )
+
+
+def refresh_sealed_state(state: TrainState, key, sec: SecurityConfig,
+                         refresh_count: int) -> TrainState:
+    """Re-seal a sealed TrainState under fresh nonce lanes (epoch bump).
+
+    Verify + decrypt host-side (raises on tamper — a corrupt state is never
+    re-signed), then seal again with a lane base no previous incarnation has
+    touched.  ``refresh_count`` MUST strictly increase across calls under one
+    key — reusing a count reuses lanes.  Use ``make_refresh_fn`` for the
+    Supervisor wiring; it owns the counter."""
+    plain = unseal_state_host(state, key, sec)
+    return seal_state(plain, key, sec, nonce_base=refresh_count << 20)
+
+
+def make_refresh_fn(key, sec: SecurityConfig) -> Callable:
+    """Supervisor ``refresh_fn`` with the refresh ordinal tracked inside —
+    each call re-seals under a strictly fresher nonce-lane base."""
+    counter = itertools.count(1)
+
+    def refresh(state: TrainState) -> TrainState:
+        return refresh_sealed_state(state, key, sec, next(counter))
+
+    return refresh
 
 
 def unseal_state_host(state: TrainState, key, sec: SecurityConfig) -> TrainState:

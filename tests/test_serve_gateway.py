@@ -15,7 +15,8 @@ from repro import configs
 from repro.core.channel import SecureChannel
 from repro.models import registry
 from repro.serve import (PagedKVPool, PoolExhausted, SecureGateway,
-                         ServeEngine, SessionManager, TOKEN_POISON)
+                         ServeEngine, SessionManager, TOKEN_POISON,
+                         swap_object_id)
 from repro.serve import kv_pager
 
 PAGE = 8          # page_size
@@ -176,6 +177,151 @@ def test_rotation_under_traffic_preserves_output(setup, gateway, reference):
                                       reference["alice"])
     finally:
         gateway.sessions.rotate_every = 0
+
+
+# ---------------------------------------------------------------------------
+# preemption: sealed swap-out to the store, swap-in, resume
+# ---------------------------------------------------------------------------
+
+def _fill_slots_then_preempt(gateway, prompts):
+    """Fill all 3 slots with priority-0 requests, step, then submit a
+    priority-5 request ('dave', alice's prompt) and step until it preempts.
+    Returns (rids dict, victim rid)."""
+    rids = {t: gateway.submit(t, prompts[t], max_new=N_NEW, priority=0)
+            for t in ("alice", "bob", "carol")}
+    gateway.step()
+    rids["dave"] = gateway.submit("dave", prompts["alice"], max_new=N_NEW,
+                                  priority=5)
+    ev = gateway.step()
+    assert len(ev["preempted"]) == 1      # exactly one victim makes room
+    victim = ev["preempted"][0]
+    assert gateway.status(victim) == "swapped"
+    return rids, victim
+
+
+def test_preempt_swap_resume_bitwise_equal(setup, gateway, reference):
+    """A preempted-and-resumed request's token stream is bitwise-identical
+    to the same request run without preemption."""
+    cfg, params, prompts = setup
+    rids, victim = _fill_slots_then_preempt(gateway, prompts)
+    vreq = gateway.scheduler.requests[victim]
+    assert not vreq.pages                 # pages returned to the pool
+    assert gateway.store.exists(swap_object_id(victim))
+    man = gateway.store.manifest(swap_object_id(victim))
+    assert man["kind"] == "kv_swap" and man["pinned"]
+    assert man["tenant_id"] == vreq.tenant_id
+    gateway.drain()
+    assert vreq.swaps_out >= 1 and vreq.swaps_in >= 1
+    for t, rid in rids.items():
+        assert gateway.status(rid) == "done"
+        ref = reference["alice"] if t == "dave" else reference[t]
+        np.testing.assert_array_equal(gateway.collect(rid), ref)
+    m = gateway.metrics()
+    assert m["swap_outs"] >= 1 and m["swap_ins"] >= 1
+    assert m["preempted_requests"] >= 1
+    assert m["pool_occupancy_pct"] > 0
+    assert gateway.pool.live_pages == 0
+    assert gateway.store.objects(kind="kv_swap") == []   # nothing left behind
+
+
+def test_tampered_swap_object_poisons_only_owner(setup, gateway, reference):
+    """Flipping one bit of a swapped-out page in the untrusted store poisons
+    the owning request at swap-in — everyone else is untouched."""
+    cfg, params, prompts = setup
+    rids, victim = _fill_slots_then_preempt(gateway, prompts)
+    obj = gateway.store._mem[swap_object_id(victim)]     # the untrusted host
+    obj.chunks["k_ct"].reshape(-1)[0] ^= 1
+    gateway.drain()
+    assert gateway.status(victim) == "poisoned"
+    vreq = gateway.scheduler.requests[victim]
+    assert vreq.tokens_out[-1] == TOKEN_POISON
+    for t, rid in rids.items():
+        if rid == victim:
+            continue
+        assert gateway.status(rid) == "done"
+        ref = reference["alice"] if t == "dave" else reference[t]
+        np.testing.assert_array_equal(gateway.collect(rid), ref)
+    assert gateway.pool.live_pages == 0
+
+
+def test_stale_swap_replay_poisons_only_owner(setup, gateway, reference):
+    """Replaying an *older* swap-out (valid bytes, stale freshness) fails the
+    nonce-bound page MAC at swap-in: the retained nonces moved on."""
+    import copy
+    cfg, params, prompts = setup
+    rids, victim = _fill_slots_then_preempt(gateway, prompts)
+    vreq = gateway.scheduler.requests[victim]
+    stale = copy.deepcopy(
+        gateway.store._mem[swap_object_id(victim)].chunks)   # swap #1 bytes
+    # let the victim swap back in and make progress (nonces bump on decode)
+    toks_at_swap = len(vreq.tokens_out)
+    for _ in range(100):
+        if vreq.swaps_in >= 1 and len(vreq.tokens_out) > toks_at_swap:
+            break
+        gateway.step()
+    assert vreq.status == "running" and not vreq.finished
+    # force a second swap-out, then replay the stale bytes into the store
+    ev = {"preempted": []}
+    gateway.scheduler._swap_out(vreq, ev)
+    assert ev["preempted"] == [victim] and vreq.swaps_out == 2
+    gateway.store._mem[swap_object_id(victim)].chunks = stale
+    gateway.drain()
+    assert gateway.status(victim) == "poisoned"
+    for t, rid in rids.items():
+        if rid != victim:
+            assert gateway.status(rid) == "done"
+    assert gateway.pool.live_pages == 0
+
+
+def test_destroyed_swap_object_poisons_only_owner(setup, gateway, reference):
+    """A store that deletes (or reshapes) a swapped-out object is the same
+    attacker with a blunter instrument: the owner is poisoned at swap-in,
+    the gateway and every other request keep going."""
+    cfg, params, prompts = setup
+    rids, victim = _fill_slots_then_preempt(gateway, prompts)
+    gateway.store.delete(swap_object_id(victim))
+    gateway.drain()
+    assert gateway.status(victim) == "poisoned"
+    assert gateway.scheduler.requests[victim].tokens_out[-1] == TOKEN_POISON
+    for t, rid in rids.items():
+        if rid != victim:
+            assert gateway.status(rid) == "done"
+            ref = reference["alice"] if t == "dave" else reference[t]
+            np.testing.assert_array_equal(gateway.collect(rid), ref)
+    assert gateway.pool.live_pages == 0
+
+
+def test_oversubscribed_pool_completes_all(setup):
+    """Total reserved pages across requests exceed the physical pool; the
+    preemptive scheduler swaps sealed KV through the store and every request
+    still completes."""
+    cfg, params, prompts = setup
+    gw = SecureGateway(cfg, params, security="trusted", max_slots=2,
+                       page_size=PAGE, n_pages=5, max_pages_per_seq=2)
+    rng = np.random.RandomState(7)
+
+    def prompt():
+        return rng.randint(0, cfg.vocab, int(rng.randint(5, 12)))
+
+    lo1 = gw.submit("t0", prompt(), max_new=4, priority=0)
+    lo2 = gw.submit("t1", prompt(), max_new=4, priority=0)
+    gw.step()                              # both admitted: pool now full
+    hi1 = gw.submit("t2", prompt(), max_new=4, priority=9)
+    hi2 = gw.submit("t3", prompt(), max_new=4, priority=9)
+    lo3 = gw.submit("t0", prompt(), max_new=4, priority=0)
+    lo4 = gw.submit("t1", prompt(), max_new=4, priority=0)
+    all_rids = [lo1, lo2, hi1, hi2, lo3, lo4]
+    reserved = sum(gw.scheduler.required_pages(gw.scheduler.requests[r])
+                   for r in all_rids)
+    assert reserved > gw.pool.n_pages - 1  # genuinely oversubscribed
+    gw.drain()
+    for rid in all_rids:
+        assert gw.status(rid) == "done"
+        assert len(gw.scheduler.requests[rid].tokens_out) == 4
+    m = gw.metrics()
+    assert m["swap_outs"] >= 2 and m["swap_ins"] >= 2
+    assert gw.pool.live_pages == 0
+    assert gw.store.objects(kind="kv_swap") == []
 
 
 # ---------------------------------------------------------------------------

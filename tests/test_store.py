@@ -1,0 +1,324 @@
+"""Sealed spill store: manifests, integrity, freshness, eviction; the
+reseal-count nonce-lane guard; store-backed checkpoints and session warm
+state; PagedKVPool free-list churn (property-style)."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro.core import sealed
+from repro.serve.kv_pager import SCRATCH_PAGE, PagedKVPool, PoolExhausted
+from repro.serve.sessions import SessionManager, warm_object_id
+from repro.store import (LargestFirstEviction, LRUEviction, SealedStore,
+                         StoreError, StoreFull)
+from repro.train import checkpoint
+from repro.train.fault import Supervisor
+
+KB = b"\xabK" * 16
+
+
+def _chunks(seed=0, n=3, size=64):
+    rng = np.random.RandomState(seed)
+    return {f"c{i}": rng.randint(0, 2**31, size).astype(np.uint32)
+            for i in range(n)}
+
+
+# ---------------------------------------------------------------------------
+# SealedStore core
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["mem", "disk"])
+def test_store_put_get_roundtrip(backend, tmp_path):
+    store = SealedStore(str(tmp_path) if backend == "disk" else None)
+    chunks = _chunks()
+    man = store.put("obj/1", "alice", chunks, key_bytes=KB, kind="kv_swap",
+                    freshness=1, nonce_epoch=2, pinned=True,
+                    meta={"rid": 7})
+    assert man["tenant_id"] == "alice" and man["kind"] == "kv_swap"
+    assert man["freshness"] == 1 and man["nonce_epoch"] == 2
+    assert man["meta"]["rid"] == 7 and man["hmac"]
+    got, man2 = store.get("obj/1", key_bytes=KB)
+    for n, c in chunks.items():
+        np.testing.assert_array_equal(got[n], c)
+    assert man2["merkle_root"] == man["merkle_root"]
+    assert store.objects(tenant_id="alice", kind="kv_swap") == ["obj/1"]
+    store.delete("obj/1")
+    assert not store.exists("obj/1")
+
+
+@pytest.mark.parametrize("backend", ["mem", "disk"])
+def test_store_tamper_and_wrong_key_detected(backend, tmp_path):
+    store = SealedStore(str(tmp_path) if backend == "disk" else None)
+    store.put("x", "a", _chunks(), key_bytes=KB)
+    with pytest.raises(StoreError):
+        store.get("x", key_bytes=b"wrong" * 8)          # HMAC mismatch
+    # tamper a chunk in the untrusted tier
+    if backend == "mem":
+        store._mem["x"].chunks["c0"][3] ^= 1
+    else:
+        p = os.path.join(store._obj_dir("x"), "c0.npy")
+        arr = np.load(p)
+        arr[3] ^= 1
+        np.save(p, arr)
+    with pytest.raises(StoreError):
+        store.get("x", key_bytes=KB)
+    assert not store.verify_object("x", KB)
+    # verify=False hands back the bytes as-is (the swap-in path: the real
+    # check is the accelerator's nonce-bound page MAC)
+    got, _ = store.get("x", verify=False)
+    assert got["c0"].shape == (64,)
+    report = store.fsck({"a": KB})
+    assert report["corrupt"] == ["x"] and report["ok"] == []
+
+
+def test_store_freshness_monotone():
+    store = SealedStore()
+    store.put("o", "t", _chunks(1), freshness=5)
+    with pytest.raises(StoreError):
+        store.put("o", "t", _chunks(2), freshness=4)    # stale write refused
+    store.put("o", "t", _chunks(3), freshness=5)        # equal: resave path
+    store.put("o", "t", _chunks(4), freshness=6)
+    assert store.manifest("o")["freshness"] == 6
+    assert store.stats["freshness_rejects"] == 1
+
+
+def test_store_capacity_lru_eviction_respects_pins():
+    one_kb = 1024 // 4
+    store = SealedStore(capacity_bytes=3 * 1024, policy=LRUEviction())
+    store.put("a", "t", {"c": np.zeros(one_kb, np.uint32)})
+    store.put("pin", "t", {"c": np.zeros(one_kb, np.uint32)}, pinned=True)
+    store.put("b", "t", {"c": np.zeros(one_kb, np.uint32)})
+    store.get("a")                       # 'a' is now more recent than 'b'
+    store.put("d", "t", {"c": np.zeros(one_kb, np.uint32)})
+    assert store.exists("pin") and store.exists("a") and store.exists("d")
+    assert not store.exists("b")         # LRU victim
+    assert store.stats["evictions"] == 1
+    # nothing evictable left -> fail loudly, never drop pinned state
+    store.put("e", "t", {"c": np.zeros(one_kb, np.uint32)}, pinned=True)
+    store.put("f", "t", {"c": np.zeros(one_kb, np.uint32)}, pinned=True)
+    with pytest.raises(StoreFull):
+        store.put("g", "t", {"c": np.zeros(one_kb, np.uint32)})
+
+
+def test_largest_first_eviction():
+    store = SealedStore(capacity_bytes=4 * 1024,
+                        policy=LargestFirstEviction())
+    store.put("small", "t", {"c": np.zeros(64, np.uint32)})
+    store.put("big", "t", {"c": np.zeros(768, np.uint32)})
+    store.put("new", "t", {"c": np.zeros(512, np.uint32)})
+    assert store.exists("small") and not store.exists("big")
+
+
+# ---------------------------------------------------------------------------
+# reseal-count nonce-lane guard (regression for the >131-reseal overflow)
+# ---------------------------------------------------------------------------
+
+def test_reseal_lane_overflow_is_real_and_guard_stops_it(key):
+    """131 resealings of leaf 0 walk its nonce into leaf 1's keystream lane
+    (counter reuse); the ResealCounter refuses reseal #131."""
+    spec = sealed.SealedSpec()
+    x = jnp.arange(32, dtype=jnp.float32)
+    tree = sealed.seal_tree([x, x], key, spec, nonce_base=0)
+    # the vulnerability: leaf0's nonce after 131 bumps == leaf1's base nonce,
+    # so the same plaintext seals to the SAME ciphertext -> keystream reuse
+    walked = sealed.seal(x, key, int(tree[0].nonce) + 131, spec)
+    np.testing.assert_array_equal(np.asarray(walked.ct),
+                                  np.asarray(tree[1].ct))
+    guard = sealed.ResealCounter()
+    assert guard.limit == sealed.TREE_LEAF_STRIDE - 1 == 130
+    for _ in range(guard.limit):
+        guard.note()                      # 130 resealings are within budget
+    assert guard.exhausted and guard.remaining == 0
+    with pytest.raises(sealed.NonceLaneExhausted):
+        guard.note()                      # the 131st would touch leaf 1's lane
+    guard.reset()
+    guard.note()                          # fresh epoch -> budget restored
+
+
+def test_supervisor_lane_guard_forces_refresh(tmp_path):
+    refreshes = []
+
+    def step_fn(state, batch):
+        return state + 1, {"loss": jnp.zeros(())}
+
+    sup = Supervisor(step_fn=step_fn, batch_fn=lambda i: i,
+                     ckpt_dir=str(tmp_path), key_bytes=KB, save_every=100,
+                     lane_guard=sealed.ResealCounter(limit=3),
+                     refresh_fn=lambda s: refreshes.append(1) or s)
+    _, _, events = sup.run(jnp.zeros(()), n_steps=10)
+    assert events["lane_refreshes"] == len(refreshes) == 3
+    # without a refresh hook the loop fails closed instead of reusing lanes
+    sup2 = Supervisor(step_fn=step_fn, batch_fn=lambda i: i,
+                      ckpt_dir=str(tmp_path), key_bytes=KB, save_every=100,
+                      lane_guard=sealed.ResealCounter(limit=3))
+    with pytest.raises(sealed.NonceLaneExhausted):
+        sup2.run(jnp.zeros(()), n_steps=10)
+
+
+# ---------------------------------------------------------------------------
+# store-backed checkpoints + session warm state
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_is_a_store_object(tmp_path):
+    state = {"w": jnp.arange(12, dtype=jnp.float32), "b": jnp.ones((3,))}
+    path = checkpoint.save(str(tmp_path), 7, state, KB)
+    man = SealedStore(str(tmp_path)).manifest("ckpt_000007")
+    assert man["kind"] == "checkpoint" and man["freshness"] == 7
+    assert [c["name"] for c in man["chunks"]] == ["000000", "000001"]
+    restored, step = checkpoint.restore(path, state, KB)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(state["w"]))
+    assert checkpoint.fsck(str(tmp_path), KB) == {"ok": ["ckpt_000007"],
+                                                  "corrupt": []}
+
+
+def test_supervisor_restore_forces_lane_refresh(tmp_path):
+    """A restored checkpoint carries older leaf nonces than the guard's
+    count reflects — recovery must force a refresh before the next reseal."""
+    from repro.train.fault import FailureInjector
+
+    refreshes = []
+
+    def step_fn(state, batch):
+        return state + 1, {"loss": jnp.zeros(())}
+
+    sup = Supervisor(step_fn=step_fn, batch_fn=lambda i: i,
+                     ckpt_dir=str(tmp_path), key_bytes=KB, save_every=100,
+                     injector=FailureInjector(fail_at_steps=(4,)),
+                     lane_guard=sealed.ResealCounter(limit=50),
+                     refresh_fn=lambda s: refreshes.append(1) or s)
+    _, _, events = sup.run(jnp.zeros(()), n_steps=8)
+    assert events["failures"] == 1
+    assert events["lane_refreshes"] >= 1 and refreshes  # forced by restore
+
+
+def test_warm_state_forged_epoch_starts_cold_instead_of_crashing():
+    """The warm tier is untrusted: an epoch forged past the nonce space must
+    not brick register() — the tenant just starts cold."""
+    store = SealedStore()
+    mgr = SessionManager(store=store)
+    mgr.register("t")
+    mgr.note_launch("t", n=32)
+    obj = store._mem[warm_object_id("t")]            # the untrusted host
+    obj.manifest["meta"]["epoch"] = 1 << 16          # >= epoch space
+    mgr2 = SessionManager(store=store)
+    sess = mgr2.register("t")                        # must not raise
+    assert sess.launches == 0 and sess.channel.epoch == 0
+
+
+def test_session_warm_state_survives_manager_restart():
+    store = SealedStore()
+    mgr = SessionManager(store=store)
+    sess = mgr.register("tenant-a")
+    mgr.note_launch("tenant-a", n=32)      # hits the persist threshold
+    assert store.exists(warm_object_id("tenant-a"))
+    epoch_before = sess.channel.epoch
+    # a "restarted gateway": fresh manager, same store
+    mgr2 = SessionManager(store=store)
+    sess2 = mgr2.register("tenant-a")
+    assert sess2.launches == 32
+    assert sess2.channel.epoch > epoch_before   # never re-walk spent lanes
+    assert sess2.channel.key_bytes != sess.channel.key_bytes  # fresh handshake
+
+
+# ---------------------------------------------------------------------------
+# preemption feasibility (engine-free scheduler: admission logic only)
+# ---------------------------------------------------------------------------
+
+def test_no_futile_preemption_and_unadmittable_submit_rejected():
+    """A victim is only swapped out if evicting the eligible class actually
+    admits the waiter; a request larger than the pool is rejected upfront."""
+    from repro.serve.scheduler import Scheduler
+
+    pool = PagedKVPool(n_pages=6, page_size=4, n_layers=1, n_kv_heads=1,
+                       hd=4, dtype=jnp.float32)       # 5 usable pages
+    mgr = SessionManager()
+    mgr.register("lo")
+    mgr.register("hi")
+    sched = Scheduler(engine=None, pool=pool, sessions=mgr, max_slots=2,
+                      max_pages=8)
+    # a running low-priority request holding 2 pages (admitted by hand so no
+    # engine is needed)
+    vid = sched.submit("lo", np.arange(4, dtype=np.int32), max_new=4)
+    victim = sched.requests[vid]
+    victim.pages = pool.alloc(2, "lo", mgr.channel("lo").key_words, [1, 2])
+    victim.slot, victim.status = 0, "running"
+    sched.slots[0] = victim
+    sched.queue.remove(victim)
+    hog = pool.alloc(3, "other", np.array([9, 9], np.uint32), [3, 4, 5])
+    assert pool.free_pages == 0
+    # waiter needs 4 pages; victim's 2 + 0 free can never satisfy it
+    sched.submit("hi", np.arange(8, dtype=np.int32), max_new=8, priority=5)
+    sched._admit({"admitted": [], "emitted": [], "finished": [],
+                  "poisoned": [], "preempted": [], "resumed": []})
+    assert victim.status == "running"          # not swapped out for nothing
+    assert sched.swap_stats["swap_outs"] == 0
+    assert sched.store.objects(kind="kv_swap") == []
+    pool.free(hog)
+    # a request that exceeds the whole pool is refused at submit time
+    with pytest.raises(ValueError):
+        sched.submit("hi", np.arange(20, dtype=np.int32), max_new=4)
+
+
+# ---------------------------------------------------------------------------
+# PagedKVPool free-list churn (property-style over random interleavings)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**16))
+def test_pool_free_list_churn_never_double_allocates(seed):
+    rng = np.random.RandomState(seed)
+    pool = PagedKVPool(n_pages=12, page_size=4, n_layers=1, n_kv_heads=1,
+                       hd=4, dtype=jnp.float32)
+    live: dict[str, list] = {}
+    next_id = 0
+    for _ in range(40):
+        op = rng.randint(3)
+        if op == 0:                                   # alloc
+            n = int(rng.randint(1, 4))
+            owner = f"r{next_id}"
+            try:
+                pages = pool.alloc(n, owner, np.array([1, next_id + 1],
+                                                      np.uint32),
+                                   list(rng.randint(1, 1000, n)))
+            except PoolExhausted:
+                assert n > pool.free_pages
+                continue
+            next_id += 1
+            assert SCRATCH_PAGE not in pages          # page 0 never leaves
+            assert len(set(pages)) == len(pages)      # no dup in one alloc
+            for other in live.values():               # no cross-owner dup
+                assert not set(pages) & set(other)
+            live[owner] = pages
+        elif op == 1 and live:                        # free (finish)
+            owner = sorted(live)[rng.randint(len(live))]
+            pool.free(live.pop(owner))
+        elif op == 2 and live:                        # swap-out + swap-in
+            owner = sorted(live)[rng.randint(len(live))]
+            pages = live.pop(owner)
+            n = len(pages)
+            pool.free(pages)
+            try:
+                back = pool.alloc(n, owner, np.array([2, 2], np.uint32),
+                                  list(rng.randint(1, 1000, n)))
+            except PoolExhausted:
+                continue
+            assert SCRATCH_PAGE not in back
+            for other in live.values():
+                assert not set(back) & set(other)
+            live[owner] = back
+        # invariant: the free list and live sets partition pages 1..n-1
+        n_live = sum(len(v) for v in live.values())
+        assert pool.free_pages + n_live == pool.n_pages - 1
+        assert pool.live_pages == n_live
+    for owner in sorted(live):                        # drain
+        pool.free(live.pop(owner))
+    assert pool.free_pages == pool.n_pages - 1        # occupancy restored
+    assert pool.live_pages == 0
