@@ -6,7 +6,10 @@
   sealed_lm    Table-1 analogue measured on an LM (none/ctr/trusted)
   serve_gateway  multi-tenant preemptive gateway: tok/s + p50/p95 per-token
                latency, swap-out/in counts and pool occupancy for steady and
-               preemption-heavy traffic (off vs trusted)
+               preemption-heavy traffic (off vs trusted), plus a bursty-
+               admission section comparing whole-page-reseal vs slice-sealed
+               open pages (sealed bytes per decode token, §3.4) across
+               prefill chunk sizes
   roofline     §Roofline three-term table for all 40 cells (needs
                results/dryrun.jsonl from repro.launch.dryrun)
 
@@ -41,7 +44,8 @@ def main() -> None:
     sealed_lm.run()
     print("=" * 72)
     if args.smoke:
-        serve_gateway.run(requests=3, max_new=3, slots=2)
+        serve_gateway.run(requests=3, max_new=3, slots=2,
+                          burst_chunks=(8,))
     else:
         serve_gateway.run()
     print("=" * 72)

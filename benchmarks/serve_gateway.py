@@ -14,6 +14,18 @@ Two scenarios per mode:
                low-priority batch requests hold every slot — the scheduler
                swaps sealed KV through the SealedStore host tier and back
 
+A third section runs a *bursty admission* scenario (every request arrives
+at once) in trusted mode and compares the decode write-back disciplines:
+
+    whole-page   legacy baseline — the tail KV page re-seals entirely under
+                 a bumped nonce on every decode token (O(page bytes)/token)
+    open-page    slice-sealed open pages — only the new token slot is
+                 sealed, pages close once when full (O(bytes written)/token,
+                 the paper's §3.4 cost model)
+
+at several prefill chunk sizes, reporting TTFT, prefill-chunk occupancy and
+sealed-bytes-per-decode-token against the whole-page baseline.
+
 Smoke-sized model so the numbers measure the *protocol machinery* (seal /
 unseal / MAC per page, variable-occupancy gather, verbatim swap copies)
 rather than raw FLOPs.
@@ -46,8 +58,18 @@ def _submit_preempt(gw, vocab, tenants, requests, max_new, seed):
                   max_new=max_new, priority=5)
 
 
+def _submit_burst(gw, vocab, tenants, requests, max_new, seed):
+    """Bursty admission: every request arrives before the first step."""
+    rng = np.random.RandomState(seed)
+    for i in range(requests):
+        plen = int(rng.randint(8, 25))
+        gw.submit(f"tenant-{i % tenants}", rng.randint(0, vocab, plen),
+                  max_new=max_new)
+
+
 def run(arch: str = "granite-3-2b", tenants: int = 3, requests: int = 6,
-        max_new: int = 8, slots: int = 4) -> None:
+        max_new: int = 8, slots: int = 4, burst: bool = True,
+        burst_chunks: tuple = (0, 8)) -> None:
     import jax
 
     from repro import configs
@@ -84,6 +106,48 @@ def run(arch: str = "granite-3-2b", tenants: int = 3, requests: int = 6,
                   f"{m['mean_ttft_ms']:8.1f} | {m['preempted_ttft_ms']:8.1f} "
                   f"| {swaps:>7} | {m['pool_occupancy_pct']:6.1f} | "
                   f"{m['kv_pages_peak']:5d}")
+    if burst:
+        run_burst(cfg, params, tenants=tenants, requests=requests,
+                  max_new=max_new, slots=slots, chunks=burst_chunks)
+
+
+def run_burst(cfg, params, tenants: int = 3, requests: int = 6,
+              max_new: int = 8, slots: int = 4,
+              chunks: tuple = (0, 8)) -> None:
+    """Bursty admission: whole-page-reseal baseline vs open pages, at
+    several prefill chunk sizes (trusted mode, page_size 8)."""
+    from repro.serve import SecureGateway
+
+    print()
+    print(f"burst admission (trusted): {requests} requests at once, "
+          "write-back discipline x prefill chunk size")
+    header = (f"{'write-back':>12} | {'chunk':>5} | {'ttft ms':>8} | "
+              f"{'chunk occ %':>11} | {'sealed B/tok':>12} | "
+              f"{'vs baseline':>11} | {'closes':>6}")
+    print(header)
+    print("-" * len(header))
+    variants = [("whole-page", False, 0)]
+    variants += [("open-page", True, c) for c in chunks]
+    baseline_bpt = None
+    for name, open_pages, chunk in variants:
+        gw = SecureGateway(cfg, params, security="trusted",
+                           max_slots=slots, page_size=8, n_pages=64,
+                           max_pages_per_seq=4, open_pages=open_pages,
+                           prefill_chunk=chunk)
+        _submit_burst(gw, cfg.vocab, tenants, requests, max_new, seed=0)
+        gw.drain()
+        gw.reset_metrics()
+        _submit_burst(gw, cfg.vocab, tenants, requests, max_new, seed=1)
+        gw.drain()
+        m = gw.metrics()
+        bpt = m["sealed_bytes_per_token"]
+        if baseline_bpt is None:
+            baseline_bpt = bpt
+        ratio = baseline_bpt / bpt if bpt else float("inf")
+        label = str(chunk) if chunk else "max"
+        print(f"{name:>12} | {label:>5} | {m['mean_ttft_ms']:8.1f} | "
+              f"{m['prefill_chunk_occupancy_pct']:11.1f} | {bpt:12.1f} | "
+              f"{ratio:10.2f}x | {m['page_closes']:6d}")
 
 
 if __name__ == "__main__":

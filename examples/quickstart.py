@@ -75,6 +75,12 @@ def main():
     print(f"{m['tokens']} tokens at {m['tok_per_s']:.1f} tok/s over "
           f"{len(m['tokens_per_tenant'])} tenant sessions "
           f"(KV pages peak {m['kv_pages_peak']})")
+    # open-page sealing: each decode step sealed only the new token's slot
+    # (plus one page-close per filled page) instead of a whole KV page —
+    # per-token cost O(bytes written), the paper's §3.4 model.
+    print(f"sealed bytes per decode token: {m['sealed_bytes_per_token']:.0f} "
+          f"(page closes: {m['page_closes']}, "
+          f"prefill chunks: {m['prefill_chunks']})")
 
     # -- 6. oversubscription via preemptive swap --------------------------
     # A pool of 4 usable pages, but 6 requests that reserve 2 pages each

@@ -167,6 +167,22 @@ class SecureChannel:
                 | (self.epoch & (_EPOCH_SPACE - 1)) << 16
                 | base)
 
+    def restore_register_floor(self, last_nonce: int) -> None:
+        """Rule-3 warm restart: raise the register-file nonce floor.
+
+        A restarted gateway's device register file would otherwise start at
+        0 and accept *any* forward nonce — including a replayed pre-restart
+        launch stream.  Restoring the last verified launch nonce from warm
+        state makes pre-restart nonces stale on the device side, exactly as
+        if the process had never died.  Monotone: never lowers the floor.
+        """
+        floor = max(0, int(last_nonce))
+        if self.host_regs is not None:
+            self.host_regs.nonce = max(self.host_regs.nonce, floor)
+        if self.device_regs is not None:
+            self.device_regs.last_nonce = max(self.device_regs.last_nonce,
+                                              floor)
+
     def rekey(self, key_words: np.ndarray, key_bytes: bytes) -> None:
         """Install a rotated session key (new handshake material).
 

@@ -171,6 +171,19 @@ def verify_tags(words: jax.Array, key: jax.Array, chunk_words: int,
     return got == tags
 
 
+def tag_root(words: jax.Array, key: jax.Array, chunk_words: int,
+             domain: int = 0xA11CE) -> jax.Array:
+    """One uint32 root tag over a flat word array (chunk tags + tree combine).
+
+    The unit of authentication for *slices*: an open KV page accumulates one
+    such root per written token slot (serve/kv_pager.py), and the roots are
+    folded into the whole-page MAC when the page closes.  Cost is
+    O(len(words)) — exactly the bytes being written, the paper's §3.4 model.
+    """
+    _, root = mac_tensor_words(words, key, chunk_words, domain)
+    return root
+
+
 # ---------------------------------------------------------------------------
 # SHAPED (shard-local) chunked MAC — tags along the last axis.
 #

@@ -158,6 +158,33 @@ class ResealCounter:
         self.count = 0
 
 
+@dataclasses.dataclass
+class NonceSpanGuard:
+    """Host-side budget for a *reserved* nonce span (e.g. one KV page's lane).
+
+    A caller that reserved ``span`` consecutive counter values via
+    ``SecureChannel.fresh_nonce(span=...)`` may bump the base nonce at most
+    ``span - 1`` times before it would walk into the next reservation —
+    counter-mode keystream reuse across two sealed objects.  ``spend()``
+    before (or as) each bump; exhaustion raises instead of letting lanes
+    touch.  Used by the paged KV pool for page close / reopen bumps.
+    """
+    span: int
+    spent: int = 0
+
+    @property
+    def remaining(self) -> int:
+        return max(0, self.span - 1 - self.spent)
+
+    def spend(self, n: int = 1) -> None:
+        if self.spent + n > self.span - 1:
+            raise NonceLaneExhausted(
+                f"nonce bump #{self.spent + n} would cross the reserved "
+                f"span of {self.span} (keystream reuse with the next "
+                "reservation) — reseal under a fresh nonce lane first")
+        self.spent += n
+
+
 # ---------------------------------------------------------------------------
 # pytree-level helpers: seal/unseal whole parameter trees
 # ---------------------------------------------------------------------------

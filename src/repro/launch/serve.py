@@ -28,7 +28,9 @@ def _run_gateway(cfg, params, args) -> None:
     gw = SecureGateway(cfg, params, security=args.security,
                        max_slots=args.slots, page_size=args.page_size,
                        n_pages=args.pages, max_pages_per_seq=args.max_pages,
-                       rotate_every=args.rotate_every)
+                       rotate_every=args.rotate_every,
+                       open_pages=not args.whole_page_reseal,
+                       prefill_chunk=args.prefill_chunk)
     rng = np.random.RandomState(0)
     rids = []
     for i in range(args.requests):
@@ -58,6 +60,10 @@ def _run_gateway(cfg, params, args) -> None:
           f"{m['swap_outs']}/{m['swap_ins']}  "
           f"preempted {m['preempted_requests']} "
           f"(ttft {m['preempted_ttft_ms']:.1f} ms)")
+    print(f"prefill chunks {m['prefill_chunks']} "
+          f"(occupancy {m['prefill_chunk_occupancy_pct']:.0f}%)  "
+          f"sealed bytes/decode-token {m['sealed_bytes_per_token']:.0f}  "
+          f"page closes {m['page_closes']} reopens {m['page_reopens']}")
     print(f"rotations {m['rotations']}  "
           f"launches verified: {m['launches_verified']}")
 
@@ -103,6 +109,12 @@ def main() -> None:
     ap.add_argument("--pages", type=int, default=64)
     ap.add_argument("--max-pages", type=int, default=4)
     ap.add_argument("--rotate-every", type=int, default=0)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="tokens per batched prefill chunk (multiple of "
+                         "page-size; 0 = whole-prompt chunks)")
+    ap.add_argument("--whole-page-reseal", action="store_true",
+                    help="legacy baseline: reseal the whole tail page per "
+                         "decode token instead of slice-sealed open pages")
     ap.add_argument("--hi-every", type=int, default=0,
                     help="every Nth request is high priority (0 = never)")
     ap.add_argument("--security", default="trusted", choices=("trusted", "off"))

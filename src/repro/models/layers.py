@@ -74,17 +74,20 @@ _NEG_INF = -1e30
 
 
 def _attend_block(q, k, v, qpos, tpos, causal: bool, t_valid=None):
-    """q: [B,qb,K,G,hd]; k,v: [B,T,K,hd]; qpos [qb]; tpos [T]. -> [B,qb,K,G,hd]
+    """q: [B,qb,K,G,hd]; k,v: [B,T,K,hd]; qpos [qb] or [B,qb]; tpos [T].
+    -> [B,qb,K,G,hd]
 
-    t_valid: scalar, or [B] vector for per-sequence cache lengths (the paged
-    variable-occupancy decode path)."""
+    qpos may carry a batch dim (per-sequence query offsets — the chunked
+    prefill path, where each lane resumes its prompt at a different
+    position).  t_valid: scalar, or [B] vector for per-sequence cache
+    lengths (the paged variable-occupancy decode path)."""
     scale = q.shape[-1] ** -0.5
     logits = jnp.einsum("bqkgd,btkd->bqkgt", q, k,
                         preferred_element_type=jnp.float32) * scale
-    mask = jnp.ones((qpos.shape[0], tpos.shape[0]), bool)
+    mask = jnp.ones((qpos.shape[-1], tpos.shape[0]), bool)
     if causal:
-        mask = tpos[None, :] <= qpos[:, None]
-    bmask = mask[None]                                    # [1, qb, T]
+        mask = tpos[None, :] <= qpos[..., :, None]        # [qb,T] | [B,qb,T]
+    bmask = mask if mask.ndim == 3 else mask[None]        # [B|1, qb, T]
     if t_valid is not None:
         tv = jnp.asarray(t_valid)
         tv = tv[:, None, None] if tv.ndim else tv         # [B,1,1] | scalar
@@ -95,10 +98,12 @@ def _attend_block(q, k, v, qpos, tpos, causal: bool, t_valid=None):
 
 
 def gqa_attention(q, k, v, *, causal: bool = True, q_block: int = 512,
-                  base_pos: int = 0, t_valid=None):
+                  base_pos=0, t_valid=None):
     """Blocked grouped-query attention.
 
     q: [B, S, H, hd];  k, v: [B, T, K, hd] with H = K * G.
+    base_pos: scalar query offset, or a [B] vector when each sequence
+    resumes at its own position (chunked prefill over a shared cache).
     t_valid: optional number of valid cache positions (decode) — a scalar,
     or a [B] vector when sequences in the batch have different lengths.
     """
@@ -107,9 +112,12 @@ def gqa_attention(q, k, v, *, causal: bool = True, q_block: int = 512,
     G = H // K
     qg = q.reshape(B, S, K, G, hd)
     tpos = jnp.arange(T)
+    base = jnp.asarray(base_pos)
+    if base.ndim:                       # [B] -> [B, 1], broadcasts over qb
+        base = base[:, None]
 
     if S == 1 or S <= q_block:
-        qpos = base_pos + jnp.arange(S)
+        qpos = base + jnp.arange(S)
         out = _attend_block(qg, k, v, qpos, tpos, causal, t_valid)
         return out.reshape(B, S, H, hd)
 
@@ -122,7 +130,7 @@ def gqa_attention(q, k, v, *, causal: bool = True, q_block: int = 512,
 
     def step(_, inp):
         qi, idx = inp
-        qpos = base_pos + idx * q_block + jnp.arange(q_block)
+        qpos = base + idx * q_block + jnp.arange(q_block)
         return None, _attend_block(qi, k, v, qpos, tpos, causal, t_valid)
 
     _, out = jax.lax.scan(step, None, (qb, jnp.arange(nb)))

@@ -116,9 +116,25 @@ class PagedEngine:
     """Variable-occupancy decode over a paged, per-tenant-sealed KV pool.
 
     Dense-transformer families only (the fixed-slot engine remains the path
-    for recurrent / encdec families).  All shapes the jitted step sees are
+    for recurrent / encdec families).  All shapes the jitted steps see are
     static: max_slots lanes, max_pages page-table columns, pool of n_pages —
     occupancy varies through the ``active`` mask, not through shapes.
+
+    Two sealing disciplines for the decode write-back, selected by
+    ``open_pages`` (both produce bitwise-identical token streams):
+
+      * open_pages=True — the tail page of each sequence is OPEN: each step
+        seals only the new token slot (kv_pager.seal_slot, O(slot bytes))
+        and the page closes once per page_size tokens (close_page, one
+        nonce bump + the page-close MAC).  Per-token seal cost is
+        O(bytes written) — the paper's §3.4 model.
+      * open_pages=False — legacy baseline: the whole tail page re-seals
+        under a bumped nonce every step (O(page bytes) per token).
+
+    Prefill is *chunked and batched*: ``chunk_prefill`` advances up to
+    max_slots prompts by ``prefill_chunk`` tokens in one jitted call,
+    splicing prefill work between decode steps (vLLM-style) instead of
+    running one whole prompt at a time at admission.
     """
     cfg: object
     params: object                  # sealed under the provider channel
@@ -126,96 +142,48 @@ class PagedEngine:
     pool: kv_pager.PagedKVPool
     max_slots: int
     max_pages: int                  # page-table columns per sequence
+    prefill_chunk: int = 0          # tokens per prefill chunk (0 = max seq)
 
     def __post_init__(self):
         if self.cfg.family not in ("dense",):
             raise ValueError(
                 f"PagedEngine supports dense transformers, got "
                 f"{self.cfg.family!r}")
+        ps = self.pool.page_size
+        if not self.prefill_chunk:
+            self.prefill_chunk = self.max_pages * ps
+        if self.prefill_chunk % ps:
+            raise ValueError(
+                f"prefill_chunk={self.prefill_chunk} must be a multiple of "
+                f"page_size={ps} (chunks write whole pages)")
+        self.prefill_chunk = min(self.prefill_chunk, self.max_pages * ps)
         self._sealed_params = self.channel.config.enabled
         self._decode = jax.jit(self._decode_impl)
-        self._prefill = jax.jit(self._prefill_impl)  # retraces per bucket len
+        self._chunk_prefill = jax.jit(self._chunk_prefill_impl)
+        self._close = jax.jit(self._close_impl)
+        self._reopen = jax.jit(self._reopen_impl)
 
-    # -- prefill ---------------------------------------------------------
-    def _prefill_impl(self, params_in, tokens, true_len, tenant_key,
-                      page_nonces):
-        """tokens: [1, S] padded to a page multiple; page_nonces: [S/ps]."""
-        cfg = self.cfg
-        params, okp = unseal_params(params_in, self.channel.jkey,
-                                    self._sealed_params)
-        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
-        positions = jnp.arange(x.shape[1])
-        x, (ks, vs) = transformer.backbone(params, cfg, x, positions)
-        x_last = jax.lax.dynamic_slice(
-            x, (0, true_len - 1, 0), (1, 1, x.shape[-1]))
-        logits = transformer.logits_of(params, cfg, x_last)[0, 0]
-        logits = jnp.where(okp, logits, jnp.nan)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        tok = jnp.where(okp, tok, TOKEN_POISON)
+    @property
+    def open_pages(self) -> bool:
+        return self.pool.open_pages
 
-        ps = self.pool.page_size
-        n_p = tokens.shape[1] // ps
-        Lc, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
-        # [L, 1, S, K, hd] -> per-page [n_p, L, ps, K, hd]
-        kp = ks[:, 0].reshape(Lc, n_p, ps, K, hd).transpose(1, 0, 2, 3, 4)
-        vp = vs[:, 0].reshape(Lc, n_p, ps, K, hd).transpose(1, 0, 2, 3, 4)
-        if self.pool.sealed:
-            kct, vct, ktags, vtags = jax.vmap(
-                lambda k_, v_, n_: kv_pager.seal_page(
-                    k_, v_, tenant_key, n_, self.pool.chunk_words)
-            )(kp, vp, page_nonces)
-        else:
-            kct, vct = jax.vmap(kv_pager.bitcast_page)(kp, vp)
-            ktags = jnp.zeros((n_p, self.pool.n_tags), jnp.uint32)
-            vtags = jnp.zeros((n_p, self.pool.n_tags), jnp.uint32)
-        return tok, logits, okp, kct, vct, ktags, vtags
+    # -- shared gather: page-table walk + per-page verification ----------
+    def _gather_unseal(self, pool_arrays, page_tables, seq_lens, active,
+                      okp):
+        """Gather + unseal the batch's pages.  Returns (kcache, vcache,
+        ok_seq) with caches [L, B, T, K, hd] zero-masked beyond seq_lens.
 
-    def prefill(self, tokens: np.ndarray, pages: list[int]):
-        """Run a single request's prefill and install its sealed pages.
-
-        tokens: [S] int32 prompt (true length); pages: the physical pages
-        already allocated (and branded) for this request.  Returns the first
-        generated token (int; TOKEN_POISON if weights failed verification).
-        """
-        ps = self.pool.page_size
-        S = int(tokens.shape[0])
-        bucket = -(-S // ps) * ps
-        padded = np.zeros((1, bucket), np.int32)
-        padded[0, :S] = tokens
-        n_p = bucket // ps
-        page_idx = jnp.asarray(pages[:n_p], jnp.int32)
-        tenant_key = self.pool.keys[page_idx[0]]
-        page_nonces = self.pool.nonces[page_idx]
-        tok, _, okp, kct, vct, ktags, vtags = self._prefill(
-            self.params, jnp.asarray(padded), jnp.asarray(S, jnp.int32),
-            tenant_key, page_nonces)
-        self.pool.write_pages(pages[:n_p], kct, vct, ktags, vtags)
-        return int(tok)
-
-    # -- decode ----------------------------------------------------------
-    def _decode_impl(self, params_in, tokens, seq_lens, active, page_tables,
-                     write_pp, pool_arrays):
-        """One continuous-batching decode step at variable occupancy.
-
-        tokens [B] int32 — last emitted token per slot (0 for idle lanes)
-        seq_lens [B]     — tokens already in the cache; the new KV lands here
-        active [B] bool  — live-slot mask
-        page_tables [B, P] int32 — physical page per logical page (pad = 0)
-        write_pp [B]     — physical page receiving this step's KV
-                           (SCRATCH_PAGE for idle lanes)
-        pool_arrays      — PagedKVPool.arrays()
+        Per-page verification routes by trusted-side page state: CLOSED
+        pages check the whole-page chunk tags, OPEN pages check the
+        accumulated per-slot slice tags for the written prefix (< fill).
         """
         cfg = self.cfg
-        k_ct, v_ct, k_tags, v_tags, nonces, keys = pool_arrays
+        (k_ct, v_ct, k_tags, v_tags, k_stags, v_stags, nonces, keys,
+         open_flags, fill) = pool_arrays
         B, P = page_tables.shape
         ps = self.pool.page_size
         T = P * ps
         Lc, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
-
-        params, okp = unseal_params(params_in, self.channel.jkey,
-                                    self._sealed_params)
-
-        # -- gather + unseal this batch's pages (in-graph page-table walk) --
         flat_pt = page_tables.reshape(-1)
         kp_ct = k_ct[flat_pt]
         vp_ct = v_ct[flat_pt]
@@ -231,6 +199,25 @@ class PagedEngine:
             vpl = jax.lax.bitcast_convert_type(vp_ct, cfg.act_dtype)
             ok_page = jnp.ones((B * P,), bool)
         ok_page = ok_page.reshape(B, P)
+        if self.pool.sealed and self.open_pages:
+            # by construction only each lane's TAIL page can be OPEN (full
+            # pages close, later pages are empty), so the slice-tag path
+            # runs on one page per lane, not B*P: its verdict overrides the
+            # whole-page check exactly where the trusted state says OPEN
+            tail_idx = jnp.clip(seq_lens // ps, 0, P - 1)         # [B]
+            tail_pp = jnp.take_along_axis(page_tables, tail_idx[:, None],
+                                          axis=1)[:, 0]
+            ok_open = jax.vmap(
+                lambda pp: kv_pager.verify_open_page(
+                    k_ct[pp], v_ct[pp], k_stags[pp], v_stags[pp],
+                    keys[pp], nonces[pp], fill[pp],
+                    self.pool.chunk_words)
+            )(tail_pp)
+            ok_closed_tail = jnp.take_along_axis(ok_page, tail_idx[:, None],
+                                                 axis=1)[:, 0]
+            ok_tail = jnp.where(open_flags[tail_pp], ok_open,
+                                ok_closed_tail)
+            ok_page = ok_page.at[jnp.arange(B), tail_idx].set(ok_tail)
         # only pages holding valid positions count toward a slot's verdict,
         # and idle lanes (scratch-page walks over garbage) never fail
         page_used = (jnp.arange(P)[None, :] * ps) < seq_lens[:, None]
@@ -247,6 +234,254 @@ class PagedEngine:
                            jnp.zeros((), cfg.act_dtype))
         vcache = jnp.where(tmask[None, :, :, None, None], vcache,
                            jnp.zeros((), cfg.act_dtype))
+        return kcache, vcache, ok_seq
+
+    # -- chunked batched prefill -----------------------------------------
+    def _chunk_prefill_impl(self, params_in, tokens, start, valid, active,
+                            page_tables, pool_arrays):
+        """Advance up to B prompts by one fixed-size chunk, batched.
+
+        tokens [B, C] int32 — this chunk's prompt tokens (0-padded)
+        start [B]           — prompt positions already in the cache (always
+                              a multiple of C, hence page-aligned)
+        valid [B]           — valid tokens in this chunk (1..C; 1 for idle)
+        active [B] bool     — lanes prefilling this step
+        page_tables [B, P]  — physical page per logical page (pad = 0)
+
+        Chunk KV for earlier chunks is read back from sealed pages, so the
+        chunk attends over (cache < start) + in-chunk causal.  Full pages
+        written by the chunk seal CLOSED; the final partial page of a
+        prompt stays OPEN with slice tags (open_pages mode) so decode can
+        keep appending at O(bytes written).
+        """
+        cfg = self.cfg
+        (k_ct, v_ct, k_tags, v_tags, k_stags, v_stags, nonces, keys,
+         open_flags, fill) = pool_arrays
+        B, C = tokens.shape
+        P = page_tables.shape[1]
+        ps = self.pool.page_size
+        n_cp = C // ps
+        Lc, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+
+        params, okp = unseal_params(params_in, self.channel.jkey,
+                                    self._sealed_params)
+        kcache, vcache, ok_seq = self._gather_unseal(
+            pool_arrays, page_tables, start, active, okp)
+
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+        positions = start[:, None] + jnp.arange(C)[None, :]       # [B, C]
+
+        def block(carry, xs):
+            (xc,) = carry
+            lp, kc, vc = xs                                       # kc [B,T,K,hd]
+            h = L.rms_norm(xc, lp["ln1"], cfg.norm_eps)
+            q, kn, vn = L.project_qkv(lp["attn"], cfg, h, positions)
+            kc2 = jax.vmap(
+                lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (p, 0, 0))
+            )(kc, kn, start)
+            vc2 = jax.vmap(
+                lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (p, 0, 0))
+            )(vc, vn, start)
+            a = L.gqa_attention(q, kc2, vc2, causal=True,
+                                q_block=cfg.q_block, base_pos=start)
+            xc = xc + L.attn_out(lp["attn"], a, B, C)
+            h2 = L.rms_norm(xc, lp["ln2"], cfg.norm_eps)
+            xc = xc + L.swiglu(lp["mlp"], h2)
+            return (xc,), (kn, vn)
+
+        (x,), (nk, nv) = jax.lax.scan(
+            block, (x,), (params["layers"], kcache, vcache))
+
+        # first-token logits for lanes whose prompt completes in this chunk
+        x_last = jax.vmap(
+            lambda xb, v: jax.lax.dynamic_slice(xb, (v - 1, 0),
+                                                (1, xb.shape[-1]))
+        )(x, valid)                                               # [B, 1, D]
+        logits = transformer.logits_of(params, cfg, x_last)[:, 0]  # [B, V]
+        logits = jnp.where(ok_seq[:, None], logits, jnp.nan)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        tok = jnp.where(ok_seq, tok, TOKEN_POISON)
+        tok = jnp.where(active, tok, 0)
+
+        # -- write back the chunk's pages -------------------------------
+        nk_b = nk.transpose(1, 0, 2, 3, 4)                        # [B,L,C,K,hd]
+        nv_b = nv.transpose(1, 0, 2, 3, 4)
+        kp = nk_b.reshape(B, Lc, n_cp, ps, K, hd).transpose(0, 2, 1, 3, 4, 5)
+        vp = nv_b.reshape(B, Lc, n_cp, ps, K, hd).transpose(0, 2, 1, 3, 4, 5)
+        kp_f = kp.reshape(B * n_cp, Lc, ps, K, hd)
+        vp_f = vp.reshape(B * n_cp, Lc, ps, K, hd)
+        cp_j = jnp.arange(n_cp)[None, :]                          # [1, n_cp]
+        lpid = jnp.clip(start[:, None] // ps + cp_j, 0, P - 1)
+        ppid = jnp.take_along_axis(page_tables, lpid, axis=1)     # [B, n_cp]
+        vip = jnp.clip(valid[:, None] - cp_j * ps, 0, ps)         # [B, n_cp]
+        written = (vip > 0) & active[:, None]
+        # unwritten chunk pages (prompt ended earlier) divert to scratch
+        target = jnp.where(written, ppid, kv_pager.SCRATCH_PAGE)
+        tgt = target.reshape(-1)
+        if self.pool.sealed:
+            kct, vct, ktags, vtags = jax.vmap(
+                lambda k_, v_, kw, nn: kv_pager.seal_page(
+                    k_, v_, kw, nn, self.pool.chunk_words)
+            )(kp_f, vp_f, keys[tgt], nonces[tgt])
+        else:
+            kct, vct = jax.vmap(kv_pager.bitcast_page)(kp_f, vp_f)
+            ktags = jnp.zeros((B * n_cp, self.pool.n_tags), jnp.uint32)
+            vtags = jnp.zeros((B * n_cp, self.pool.n_tags), jnp.uint32)
+        k_ct = k_ct.at[tgt].set(kct)
+        v_ct = v_ct.at[tgt].set(vct)
+        k_tags = k_tags.at[tgt].set(ktags)
+        v_tags = v_tags.at[tgt].set(vtags)
+        if self.open_pages:
+            # the page containing a prompt's boundary stays OPEN (decode
+            # appends into it); full pages close with their chunk tags
+            is_boundary = (vip > 0) & (vip < ps) & active[:, None]
+            open_flags = open_flags.at[tgt].set(is_boundary.reshape(-1))
+            fill = fill.at[tgt].set(
+                jnp.where(is_boundary, vip, 0).reshape(-1))
+            if self.pool.sealed:
+                bj = jnp.clip(valid // ps, 0, n_cp - 1)           # [B]
+                has_b = ((valid % ps) > 0) & active
+                b_tgt = jnp.where(
+                    has_b,
+                    jax.vmap(lambda t, j: t[j])(target, bj),
+                    kv_pager.SCRATCH_PAGE)
+                kct_p = kct.reshape(B, n_cp, Lc, ps, K, hd)
+                vct_p = vct.reshape(B, n_cp, Lc, ps, K, hd)
+                kct_b = jax.vmap(lambda c, j: c[j])(kct_p, bj)
+                vct_b = jax.vmap(lambda c, j: c[j])(vct_p, bj)
+                kst, vst = jax.vmap(
+                    lambda kc, vc, kw, nn: kv_pager.page_slot_tags(
+                        kc, vc, kw, nn, self.pool.chunk_words)
+                )(kct_b, vct_b, keys[b_tgt], nonces[b_tgt])
+                k_stags = k_stags.at[b_tgt].set(kst)
+                v_stags = v_stags.at[b_tgt].set(vst)
+        return tok, ok_seq, (k_ct, v_ct, k_tags, v_tags, k_stags, v_stags,
+                             nonces, keys, open_flags, fill)
+
+    def chunk_prefill(self, tokens, start, valid, active, page_tables):
+        """Host-side wrapper for one batched prefill-chunk step.
+
+        Returns (tok [B], ok [B]): ``tok`` is each lane's first generated
+        token, meaningful only for lanes whose prompt completed this chunk.
+        """
+        active = np.asarray(active, bool)
+        valid = np.asarray(valid, np.int32)
+        tok, ok, arrays = self._chunk_prefill(
+            self.params, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(start, jnp.int32), jnp.asarray(valid, jnp.int32),
+            jnp.asarray(active), jnp.asarray(page_tables, jnp.int32),
+            self.pool.arrays())
+        self.pool.update_arrays(arrays)
+        if self.pool.sealed:
+            pages_written = int(sum(-(-int(v) // self.pool.page_size)
+                                    for v, a in zip(valid, active) if a))
+            self.pool.stats["sealed_bytes_prefill"] += \
+                2 * self.pool.page_bytes * pages_written
+        return np.asarray(tok), np.asarray(ok)
+
+    # -- page close / reopen (open-page lifecycle) -----------------------
+    def _close_impl(self, pool_arrays, page):
+        (k_ct, v_ct, k_tags, v_tags, k_stags, v_stags, nonces, keys,
+         open_flags, fill) = pool_arrays
+        kct2, vct2, ktags, vtags, ok = kv_pager.close_page(
+            k_ct[page], v_ct[page], k_stags[page], v_stags[page],
+            keys[page], nonces[page], fill[page], self.cfg.act_dtype,
+            self.pool.chunk_words)
+        k_ct = k_ct.at[page].set(kct2)
+        v_ct = v_ct.at[page].set(vct2)
+        k_tags = k_tags.at[page].set(ktags)
+        v_tags = v_tags.at[page].set(vtags)
+        k_stags = k_stags.at[page].set(0)
+        v_stags = v_stags.at[page].set(0)
+        nonces = nonces.at[page].add(1)
+        open_flags = open_flags.at[page].set(False)
+        fill = fill.at[page].set(0)
+        return ok, (k_ct, v_ct, k_tags, v_tags, k_stags, v_stags, nonces,
+                    keys, open_flags, fill)
+
+    def close_page(self, page: int, account: str = "decode") -> bool:
+        """Close an open page (page-close MAC + one nonce bump).
+
+        account: which sealed-bytes bucket the close charges to ("decode"
+        for fill-triggered closes, "swap" for swap-out closes).  Returns
+        False if the page's slice tags failed verification — the caller
+        must poison the owner; the written tags are already corrupted.
+        """
+        if not self.open_pages:
+            return True
+        if not self.pool.sealed:
+            self.pool.mark_closed([page])
+            self.pool.stats["page_closes"] += 1
+            return True
+        self.pool.spend_nonce(page)
+        ok, arrays = self._close(self.pool.arrays(),
+                                 jnp.asarray(page, jnp.int32))
+        self.pool.update_arrays(arrays)
+        self.pool.stats["page_closes"] += 1
+        self.pool.stats[f"sealed_bytes_{account}"] += \
+            2 * self.pool.page_bytes
+        return bool(ok)
+
+    def _reopen_impl(self, pool_arrays, page, fill_n):
+        (k_ct, v_ct, k_tags, v_tags, k_stags, v_stags, nonces, keys,
+         open_flags, fill) = pool_arrays
+        kct2, vct2, kst, vst, ok = kv_pager.reopen_page(
+            k_ct[page], v_ct[page], k_tags[page], v_tags[page],
+            keys[page], nonces[page], self.cfg.act_dtype,
+            self.pool.chunk_words)
+        k_ct = k_ct.at[page].set(kct2)
+        v_ct = v_ct.at[page].set(vct2)
+        k_tags = k_tags.at[page].set(0)
+        v_tags = v_tags.at[page].set(0)
+        k_stags = k_stags.at[page].set(kst)
+        v_stags = v_stags.at[page].set(vst)
+        nonces = nonces.at[page].add(1)
+        open_flags = open_flags.at[page].set(True)
+        fill = fill.at[page].set(fill_n)
+        return ok, (k_ct, v_ct, k_tags, v_tags, k_stags, v_stags, nonces,
+                    keys, open_flags, fill)
+
+    def reopen_page(self, page: int, fill: int) -> bool:
+        """Reopen a closed partial page so decode can append (swap-in)."""
+        if not self.open_pages:
+            return True
+        if not self.pool.sealed:
+            self.pool.mark_open([page], fill)
+            self.pool.stats["page_reopens"] += 1
+            return True
+        self.pool.spend_nonce(page)
+        ok, arrays = self._reopen(self.pool.arrays(),
+                                  jnp.asarray(page, jnp.int32),
+                                  jnp.asarray(fill, jnp.int32))
+        self.pool.update_arrays(arrays)
+        self.pool.stats["page_reopens"] += 1
+        self.pool.stats["sealed_bytes_swap"] += 2 * self.pool.page_bytes
+        return bool(ok)
+
+    # -- decode ----------------------------------------------------------
+    def _decode_impl(self, params_in, tokens, seq_lens, active, page_tables,
+                     write_pp, pool_arrays):
+        """One continuous-batching decode step at variable occupancy.
+
+        tokens [B] int32 — last emitted token per slot (0 for idle lanes)
+        seq_lens [B]     — tokens already in the cache; the new KV lands here
+        active [B] bool  — live-slot mask
+        page_tables [B, P] int32 — physical page per logical page (pad = 0)
+        write_pp [B]     — physical page receiving this step's KV
+                           (SCRATCH_PAGE for idle lanes)
+        pool_arrays      — PagedKVPool.arrays()
+        """
+        cfg = self.cfg
+        (k_ct, v_ct, k_tags, v_tags, k_stags, v_stags, nonces, keys,
+         open_flags, fill) = pool_arrays
+        B, P = page_tables.shape
+        ps = self.pool.page_size
+        Lc, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+
+        params, okp = unseal_params(params_in, self.channel.jkey,
+                                    self._sealed_params)
+        kcache, vcache, ok_seq = self._gather_unseal(
+            pool_arrays, page_tables, seq_lens, active, okp)
 
         x = jnp.take(params["embed"], tokens[:, None],
                      axis=0).astype(cfg.act_dtype)                # [B, 1, D]
@@ -268,7 +503,10 @@ class PagedEngine:
             xc = xc + L.attn_out(lp["attn"], a, B, 1)
             h2 = L.rms_norm(xc, lp["ln2"], cfg.norm_eps)
             xc = xc + L.swiglu(lp["mlp"], h2)
-            return (xc,), (kc2, vc2)
+            # open mode writes back just the new slot; legacy needs the
+            # full updated cache to re-seal the whole tail page
+            ys = (kn, vn) if self.open_pages else (kc2, vc2)
+            return (xc,), ys
 
         (x,), (nk, nv) = jax.lax.scan(
             block, (x,), (params["layers"], kcache, vcache))
@@ -279,37 +517,63 @@ class PagedEngine:
         tok = jnp.where(ok_seq, tok, TOKEN_POISON)
         tok = jnp.where(active, tok, 0)                           # idle lanes
 
-        # -- write-back: reseal only the page that received this step's KV --
-        page_off = (seq_lens // ps) * ps                          # [B]
-        nk_b = nk.transpose(1, 0, 2, 3, 4)                        # [B,L,T,K,hd]
-        nv_b = nv.transpose(1, 0, 2, 3, 4)
-        k_new = jax.vmap(
-            lambda c, o: jax.lax.dynamic_slice(c, (0, o, 0, 0),
-                                               (Lc, ps, K, hd))
-        )(nk_b, page_off)                                         # [B,L,ps,K,hd]
-        v_new = jax.vmap(
-            lambda c, o: jax.lax.dynamic_slice(c, (0, o, 0, 0),
-                                               (Lc, ps, K, hd))
-        )(nv_b, page_off)
-        keys_w = keys[write_pp]                                   # [B, 2]
-        nonce_w = nonces[write_pp] + jnp.uint32(1)                # freshness
-        if self.pool.sealed:
-            kct_n, vct_n, ktags_n, vtags_n = jax.vmap(
-                lambda k_, v_, kw, nn: kv_pager.seal_page(
-                    k_, v_, kw, nn, self.pool.chunk_words)
-            )(k_new, v_new, keys_w, nonce_w)
+        if self.open_pages:
+            # -- write-back: seal ONLY the new token slot (§3.4) --------
+            # nk: [L, B, 1, K, hd] new-token slices from the scan
+            slot = seq_lens % ps                                  # [B]
+            k_slot = nk[:, :, 0].transpose(1, 0, 2, 3)            # [B,L,K,hd]
+            v_slot = nv[:, :, 0].transpose(1, 0, 2, 3)
+            keys_w = keys[write_pp]
+            nonce_w = nonces[write_pp]                            # no bump
+            if self.pool.sealed:
+                kct_s, vct_s, ktag, vtag = jax.vmap(
+                    lambda k_, v_, kw, nn, sl: kv_pager.seal_slot(
+                        k_, v_, kw, nn, sl, ps, self.pool.chunk_words)
+                )(k_slot, v_slot, keys_w, nonce_w, slot)
+                k_stags = k_stags.at[write_pp, slot].set(ktag)
+                v_stags = v_stags.at[write_pp, slot].set(vtag)
+            else:
+                udt = cipher.uint_dtype_for(cfg.act_dtype)
+                kct_s = jax.lax.bitcast_convert_type(k_slot, udt)
+                vct_s = jax.lax.bitcast_convert_type(v_slot, udt)
+            # idle lanes hit (SCRATCH_PAGE, slot 0); live lanes hold
+            # distinct pages, so no meaningful scatter collisions
+            k_ct = k_ct.at[write_pp, :, slot].set(kct_s)
+            v_ct = v_ct.at[write_pp, :, slot].set(vct_s)
+            fill = fill.at[write_pp].set(slot + 1)
         else:
-            kct_n, vct_n = jax.vmap(kv_pager.bitcast_page)(k_new, v_new)
-            ktags_n = jnp.zeros((B, self.pool.n_tags), jnp.uint32)
-            vtags_n = jnp.zeros((B, self.pool.n_tags), jnp.uint32)
-        # idle lanes target SCRATCH_PAGE; live lanes hold distinct pages, so
-        # the scatter has no meaningful index collisions.
-        k_ct = k_ct.at[write_pp].set(kct_n)
-        v_ct = v_ct.at[write_pp].set(vct_n)
-        k_tags = k_tags.at[write_pp].set(ktags_n)
-        v_tags = v_tags.at[write_pp].set(vtags_n)
-        nonces = nonces.at[write_pp].set(nonce_w)
-        return tok, ok_seq, (k_ct, v_ct, k_tags, v_tags, nonces, keys)
+            # -- legacy write-back: reseal the whole tail page ----------
+            page_off = (seq_lens // ps) * ps                      # [B]
+            nk_b = nk.transpose(1, 0, 2, 3, 4)                    # [B,L,T,K,hd]
+            nv_b = nv.transpose(1, 0, 2, 3, 4)
+            k_new = jax.vmap(
+                lambda c, o: jax.lax.dynamic_slice(c, (0, o, 0, 0),
+                                                   (Lc, ps, K, hd))
+            )(nk_b, page_off)                                     # [B,L,ps,K,hd]
+            v_new = jax.vmap(
+                lambda c, o: jax.lax.dynamic_slice(c, (0, o, 0, 0),
+                                                   (Lc, ps, K, hd))
+            )(nv_b, page_off)
+            keys_w = keys[write_pp]                               # [B, 2]
+            nonce_w = nonces[write_pp] + jnp.uint32(1)            # freshness
+            if self.pool.sealed:
+                kct_n, vct_n, ktags_n, vtags_n = jax.vmap(
+                    lambda k_, v_, kw, nn: kv_pager.seal_page(
+                        k_, v_, kw, nn, self.pool.chunk_words)
+                )(k_new, v_new, keys_w, nonce_w)
+            else:
+                kct_n, vct_n = jax.vmap(kv_pager.bitcast_page)(k_new, v_new)
+                ktags_n = jnp.zeros((B, self.pool.n_tags), jnp.uint32)
+                vtags_n = jnp.zeros((B, self.pool.n_tags), jnp.uint32)
+            # idle lanes target SCRATCH_PAGE; live lanes hold distinct
+            # pages, so the scatter has no meaningful index collisions.
+            k_ct = k_ct.at[write_pp].set(kct_n)
+            v_ct = v_ct.at[write_pp].set(vct_n)
+            k_tags = k_tags.at[write_pp].set(ktags_n)
+            v_tags = v_tags.at[write_pp].set(vtags_n)
+            nonces = nonces.at[write_pp].set(nonce_w)
+        return tok, ok_seq, (k_ct, v_ct, k_tags, v_tags, k_stags, v_stags,
+                             nonces, keys, open_flags, fill)
 
     def decode_step(self, tokens, seq_lens, active, page_tables, write_pp):
         """Host-side wrapper: threads the pool through the jitted body."""
@@ -319,4 +583,10 @@ class PagedEngine:
             jnp.asarray(page_tables, jnp.int32),
             jnp.asarray(write_pp, jnp.int32), self.pool.arrays())
         self.pool.update_arrays(arrays)
+        n_act = int(np.asarray(active, bool).sum())
+        if self.pool.sealed:
+            per = 2 * (self.pool.slot_bytes if self.open_pages
+                       else self.pool.page_bytes)
+            self.pool.stats["sealed_bytes_decode"] += n_act * per
+        self.pool.stats["decode_tokens"] += n_act
         return np.asarray(tok), np.asarray(ok)

@@ -38,7 +38,16 @@ class SecureGateway:
                  max_slots: int = 4, page_size: int = 8, n_pages: int = 64,
                  max_pages_per_seq: int = 4, rotate_every: int = 0,
                  chunk_words: int = 128, device_id: str = "tpu-0",
-                 store: SealedStore | None = None):
+                 store: SealedStore | None = None, open_pages: bool = True,
+                 prefill_chunk: int = 0):
+        """open_pages: slice-seal the tail page of each sequence (per-token
+        seal cost O(bytes written), paper §3.4) instead of re-sealing the
+        whole page every decode step.  False keeps the legacy whole-page
+        baseline — token streams are bitwise-identical either way.
+
+        prefill_chunk: tokens per batched prefill chunk (multiple of
+        page_size; 0 = whole-prompt chunks, i.e. max_pages_per_seq pages).
+        Smaller chunks cut TTFT under bursty admission."""
         self.cfg = cfg
         sec = (SecurityConfig() if security == "trusted"
                else SecurityConfig.off())
@@ -52,13 +61,14 @@ class SecureGateway:
         self.pool = PagedKVPool(
             n_pages=n_pages, page_size=page_size, n_layers=cfg.n_layers,
             n_kv_heads=cfg.n_kv_heads, hd=cfg.hd, dtype=cfg.act_dtype,
-            chunk_words=chunk_words, sealed=sealed)
+            chunk_words=chunk_words, sealed=sealed, open_pages=open_pages)
         self.engine = PagedEngine(
             cfg=cfg, params=params_dev, channel=provider, pool=self.pool,
-            max_slots=max_slots, max_pages=max_pages_per_seq)
+            max_slots=max_slots, max_pages=max_pages_per_seq,
+            prefill_chunk=prefill_chunk)
         self.scheduler = Scheduler(self.engine, self.pool, self.sessions,
                                    max_slots, max_pages_per_seq,
-                                   store=self.store)
+                                   store=self.store, provider=provider)
         self._steps = 0
         self._t_start = time.monotonic()
         self._token_latency_ms: list[float] = []
@@ -77,6 +87,12 @@ class SecureGateway:
         self._occupancy_steps = 0
         self.scheduler.swap_stats = {"swap_outs": 0, "swap_ins": 0,
                                      "swapped_bytes": 0}
+        self.scheduler.prefill_stats = {"chunks": 0, "chunk_lanes": 0,
+                                        "chunk_tokens": 0}
+        for k in ("sealed_bytes_prefill", "sealed_bytes_decode",
+                  "sealed_bytes_swap", "decode_tokens", "page_closes",
+                  "page_reopens"):
+            self.pool.stats[k] = 0
         self._metrics_from_rid = self.scheduler._next_rid
 
     # -- tenant + request lifecycle -------------------------------------
@@ -163,6 +179,9 @@ class SecureGateway:
         swaps = self.scheduler.swap_stats
         occ = (self._occupancy_sum / self._occupancy_steps
                if self._occupancy_steps else 0.0)
+        pf = self.scheduler.prefill_stats
+        ps_stats = self.pool.stats
+        dec_tok = ps_stats["decode_tokens"]
         return {
             "steps": self._steps,
             "tokens": n_tok,
@@ -178,6 +197,23 @@ class SecureGateway:
             "swap_ins": swaps["swap_ins"],
             "swapped_bytes": swaps["swapped_bytes"],
             "pool_occupancy_pct": 100.0 * occ,
+            # chunked batched prefill
+            "prefill_chunks": pf["chunks"],
+            "prefill_chunk_tokens": pf["chunk_tokens"],
+            "prefill_chunk_occupancy_pct": (
+                100.0 * pf["chunk_lanes"]
+                / (pf["chunks"] * self.engine.max_slots)
+                if pf["chunks"] else 0.0),
+            # §3.4 sealing cost accounting (ciphertext bytes through seal)
+            "sealed_bytes_prefill": ps_stats["sealed_bytes_prefill"],
+            "sealed_bytes_decode": ps_stats["sealed_bytes_decode"],
+            "sealed_bytes_swap": ps_stats["sealed_bytes_swap"],
+            "decode_tokens": dec_tok,
+            "sealed_bytes_per_token": (
+                ps_stats["sealed_bytes_decode"] / dec_tok if dec_tok
+                else 0.0),
+            "page_closes": ps_stats["page_closes"],
+            "page_reopens": ps_stats["page_reopens"],
             "tokens_per_tenant": dict(self._per_tenant),
             "kv_pages_peak": self.pool.stats["peak_live"],
             "kv_pages_free": self.pool.free_pages,

@@ -12,8 +12,9 @@ page tables (vLLM-style), gathered in-graph at decode time.
 
 Security model (paper Rules 1/2, per page):
   * confidentiality — each page is CTR-encrypted under the *owning tenant's*
-    session key, via k/v lane subkeys, with a per-page nonce; every rewrite
-    of a page bumps its nonce (freshness), so counters are never reused.
+    session key, via k/v lane subkeys, with a per-page nonce; every re-seal
+    of a page's contents bumps its nonce (freshness), so counters are never
+    reused.
   * integrity — encrypt-then-MAC chunk tags over the page ciphertext, keyed
     by a (tenant key, page nonce)-bound MAC key; a tampered or replayed page
     fails verification and NaN-poisons only the *owning* request's output.
@@ -21,12 +22,33 @@ Security model (paper Rules 1/2, per page):
     cannot unseal or forge them, and the (session-id, epoch, counter) nonce
     lanes of the two channels are disjoint by construction (core/channel.py).
 
-Threat-model note: ciphertext, tags and nonces live in untrusted HBM and
-are attacker-visible.  The per-page key *words* are NOT — they model the
-enclave/accelerator-resident slot->tenant-key map (on real hardware they
-would sit in on-die SRAM next to the session keys).  This simulation keeps
-them in a device array purely so the page-table gather stays in-graph; they
-are trusted state, and nothing derives them from attacker-visible data.
+Pages exist in two states (paper §3.4 cost model — sealing is charged per
+byte *written*):
+
+  * CLOSED — the whole page is authenticated by chunk tags over its full
+    ciphertext (``seal_page``/``unseal_page``).  Prefill-complete pages and
+    swap-out/swap-in pages are closed.
+  * OPEN — the tail page of an active sequence.  Decode appends one token
+    slot per step: only that slot's bytes are encrypted (the CTR keystream
+    is positional, so a slot's ciphertext equals the matching slice of a
+    whole-page seal under the same nonce) and one uint32 *slice tag* per
+    slot (``seal_slot``) lands in a trusted-side sidecar.  The page nonce
+    does NOT move per write — each slot is encrypted exactly once under
+    (nonce, its counter positions), so there is no counter reuse, and
+    freshness against rollback comes from the trusted-side ``fill`` count:
+    replaying an older ciphertext cannot produce a valid tag for the newest
+    slot.  When the page fills (or its sequence swaps out) it CLOSES:
+    slice tags are verified, the nonce bumps once, and a whole-page
+    *page-close MAC* is computed (``close_page``) — per-token sealing cost
+    is O(bytes written) with the close amortized over page_size tokens.
+
+Which arrays are attacker-visible: ciphertext (k_ct/v_ct), page tags and
+slice tags live in untrusted HBM.  Nonces, the open/fill state and the
+slot->tenant-key branding are trusted-side bookkeeping (enclave SRAM on
+real hardware; device arrays here so the page-table gather stays in-graph).
+
+(Nonce values are not *secret* — an attacker may read them — but they are
+not attacker-writable, which is what the freshness argument needs.)
 """
 from __future__ import annotations
 
@@ -38,12 +60,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import cipher, mac
+from ..core import sealed as sealed_guard
 
 # data-plane lane separation: k pages, v pages and page MACs never share a
 # (key, nonce) space even though all three derive from one tenant session key.
 KV_K_DOMAIN = 0x4B5047   # "KPG"
 KV_V_DOMAIN = 0x565047   # "VPG"
 KV_MAC_DOMAIN = 0x4D5047  # "MPG"
+KV_SLICE_DOMAIN = 0x534C43  # "SLC" — per-slot slice-tag key lane
 
 SCRATCH_PAGE = 0  # physical page 0 is never allocated: pad entries in page
                   # tables and write-back lanes of idle slots target it.
@@ -119,6 +143,148 @@ def bitcast_page(k_page: jax.Array, v_page: jax.Array):
             jax.lax.bitcast_convert_type(v_page, udt))
 
 
+# ---------------------------------------------------------------------------
+# open pages: slice sealing + page-close MAC
+# ---------------------------------------------------------------------------
+
+def slot_rows(n_layers: int, page_size: int, n_kv_heads: int,
+              slot) -> jax.Array:
+    """uint32[L, K] counter-row indices of one token slot within a page.
+
+    A page's CTR lattice flattens the leading dims [L, page_size, K] into
+    rows (cipher.keystream_like); slot ``t`` occupies the non-contiguous
+    rows (l * page_size + t) * K + k.  Sealing a slice against these rows
+    yields ciphertext bit-identical to the matching slice of a whole-page
+    seal under the same nonce — the property that makes open pages sound.
+    """
+    li = jnp.arange(n_layers, dtype=jnp.uint32)[:, None]
+    ki = jnp.arange(n_kv_heads, dtype=jnp.uint32)[None, :]
+    return (li * jnp.uint32(page_size) + jnp.asarray(slot, jnp.uint32)) \
+        * jnp.uint32(n_kv_heads) + ki
+
+
+def _slice_mac_key(base_key: jax.Array, nonce: jax.Array,
+                   slot) -> jax.Array:
+    """Per-(page nonce, slot) slice-tag key: slots cannot be transplanted."""
+    mk = _page_mac_key(base_key, nonce)
+    y0, y1 = cipher.threefry2x32(mk, jnp.asarray(slot, jnp.uint32),
+                                 jnp.asarray(KV_SLICE_DOMAIN, jnp.uint32))
+    return jnp.stack([y0, y1])
+
+
+def _slot_tag(ct_slot: jax.Array, base_key: jax.Array, nonce: jax.Array,
+              slot, chunk_words: int, domain: int) -> jax.Array:
+    """uint32 root tag over one slot's ciphertext words."""
+    sk = _slice_mac_key(base_key, nonce, slot)
+    return mac.tag_root(cipher.pack_words(ct_slot), sk, chunk_words, domain)
+
+
+def seal_slot(k_slot: jax.Array, v_slot: jax.Array, base_key: jax.Array,
+              nonce: jax.Array, slot, page_size: int, chunk_words: int):
+    """Seal ONE token slot of an open page — cost O(slot bytes), §3.4.
+
+    k_slot/v_slot: [n_layers, K, hd] plaintext.  Returns
+    (kct_slot, vct_slot, ktag, vtag): the slot ciphertext (bit-identical to
+    the matching slice of ``seal_page`` under the same nonce) and one uint32
+    slice tag per lane.  The page nonce does NOT move.
+    """
+    nonce = jnp.asarray(nonce, jnp.uint32)
+    Lc, K, _ = k_slot.shape
+    rows = slot_rows(Lc, page_size, K, slot)
+    kk = cipher.derive_key(base_key, KV_K_DOMAIN)
+    vk = cipher.derive_key(base_key, KV_V_DOMAIN)
+    kct = cipher.seal_bits_slice(k_slot, kk, nonce, rows)
+    vct = cipher.seal_bits_slice(v_slot, vk, nonce, rows)
+    ktag = _slot_tag(kct, base_key, nonce, slot, chunk_words, KV_K_DOMAIN)
+    vtag = _slot_tag(vct, base_key, nonce, slot, chunk_words, KV_V_DOMAIN)
+    return kct, vct, ktag, vtag
+
+
+def page_slot_tags(kct: jax.Array, vct: jax.Array, base_key: jax.Array,
+                   nonce: jax.Array, chunk_words: int):
+    """Slice tags for every slot of an already-sealed page ciphertext.
+
+    kct/vct: [n_layers, page_size, K, hd].  Returns (ktags[ps], vtags[ps]).
+    Used when a page *becomes* open with existing content: the prefill
+    boundary page and swap-in reopen.
+    """
+    ps = kct.shape[1]
+
+    def one(slot):
+        kc = jax.lax.dynamic_index_in_dim(kct, slot, axis=1, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vct, slot, axis=1, keepdims=False)
+        return (_slot_tag(kc, base_key, nonce, slot, chunk_words,
+                          KV_K_DOMAIN),
+                _slot_tag(vc, base_key, nonce, slot, chunk_words,
+                          KV_V_DOMAIN))
+
+    return jax.vmap(one)(jnp.arange(ps, dtype=jnp.int32))
+
+
+def verify_open_page(kct: jax.Array, vct: jax.Array, k_stags: jax.Array,
+                     v_stags: jax.Array, base_key: jax.Array,
+                     nonce: jax.Array, fill: jax.Array,
+                     chunk_words: int) -> jax.Array:
+    """Verify the written slots (< fill) of an open page. Traced bool.
+
+    Rollback freshness without a per-write nonce bump: ``fill`` is
+    trusted-side, so an attacker replaying the page as it looked j writes
+    ago still has to present a valid slice tag for slot fill-1 — which that
+    older ciphertext does not contain.
+    """
+    ps = kct.shape[1]
+    kt, vt = page_slot_tags(kct, vct, base_key, nonce, chunk_words)
+    ok = (kt == k_stags) & (vt == v_stags)
+    unused = jnp.arange(ps) >= jnp.asarray(fill, jnp.int32)
+    return jnp.all(ok | unused)
+
+
+def close_page(kct: jax.Array, vct: jax.Array, k_stags: jax.Array,
+               v_stags: jax.Array, base_key: jax.Array, nonce: jax.Array,
+               fill: jax.Array, dtype, chunk_words: int):
+    """OPEN -> CLOSED: the page-close MAC.  One nonce bump per page life.
+
+    Verifies the accumulated slice tags, re-seals the full page under
+    nonce+1 and computes whole-page chunk tags (the page-close MAC).  After
+    the close, the pre-close (ciphertext, slice tags) pair is dead: slice
+    tags were bound to the old nonce, and verification now goes through the
+    close MAC under nonce+1.  Returns (kct2, vct2, ktags, vtags, ok); on
+    ok=False the emitted tags are corrupted so the page fails closed rather
+    than laundering tampered ciphertext into a validly-MACed closed page.
+    """
+    ok = verify_open_page(kct, vct, k_stags, v_stags, base_key, nonce, fill,
+                          chunk_words)
+    kk = cipher.derive_key(base_key, KV_K_DOMAIN)
+    vk = cipher.derive_key(base_key, KV_V_DOMAIN)
+    k = cipher.unseal_bits(kct, kk, nonce, dtype)
+    v = cipher.unseal_bits(vct, vk, nonce, dtype)
+    n2 = jnp.asarray(nonce, jnp.uint32) + jnp.uint32(1)
+    kct2, vct2, ktags, vtags = seal_page(k, v, base_key, n2, chunk_words)
+    poison = jnp.where(ok, jnp.uint32(0), jnp.uint32(1))
+    return kct2, vct2, ktags ^ poison, vtags ^ poison, ok
+
+
+def reopen_page(kct: jax.Array, vct: jax.Array, ktags: jax.Array,
+                vtags: jax.Array, base_key: jax.Array, nonce: jax.Array,
+                dtype, chunk_words: int):
+    """CLOSED -> OPEN: verify the close MAC, re-seal under nonce+1, emit
+    per-slot slice tags so decode can keep appending.  Used at swap-in for
+    a partially-filled tail page.  Returns (kct2, vct2, k_stags, v_stags,
+    ok); tags are corrupted on ok=False (fail closed, owner-only blast
+    radius).
+    """
+    k, v, ok = unseal_page(kct, vct, ktags, vtags, base_key, nonce, dtype,
+                           chunk_words)
+    n2 = jnp.asarray(nonce, jnp.uint32) + jnp.uint32(1)
+    kk = cipher.derive_key(base_key, KV_K_DOMAIN)
+    vk = cipher.derive_key(base_key, KV_V_DOMAIN)
+    kct2 = cipher.seal_bits(k, kk, n2)
+    vct2 = cipher.seal_bits(v, vk, n2)
+    k_stags, v_stags = page_slot_tags(kct2, vct2, base_key, n2, chunk_words)
+    poison = jnp.where(ok, jnp.uint32(0), jnp.uint32(1))
+    return kct2, vct2, k_stags ^ poison, v_stags ^ poison, ok
+
+
 @dataclasses.dataclass
 class PagedKVPool:
     """Free-list allocator + device-resident page arrays.
@@ -135,6 +301,8 @@ class PagedKVPool:
     dtype: object
     chunk_words: int = 128
     sealed: bool = True
+    open_pages: bool = True     # slice-sealed tail pages (False = legacy
+                                # whole-page reseal per decode write)
 
     def __post_init__(self):
         shape = (self.n_pages, self.n_layers, self.page_size,
@@ -148,12 +316,35 @@ class PagedKVPool:
         self.v_ct = jnp.zeros(shape, udt)
         self.k_tags = jnp.zeros((self.n_pages, self.n_tags), jnp.uint32)
         self.v_tags = jnp.zeros((self.n_pages, self.n_tags), jnp.uint32)
+        # open-page sidecars: one slice tag per token slot (untrusted HBM),
+        # plus trusted-side open/fill state driving the verification path.
+        self.k_stags = jnp.zeros((self.n_pages, self.page_size), jnp.uint32)
+        self.v_stags = jnp.zeros((self.n_pages, self.page_size), jnp.uint32)
+        self.open_flags = jnp.zeros((self.n_pages,), bool)
+        self.fill = jnp.zeros((self.n_pages,), jnp.int32)
         self.nonces = jnp.zeros((self.n_pages,), jnp.uint32)
         self.keys = jnp.zeros((self.n_pages, 2), jnp.uint32)
         self._free = deque(range(1, self.n_pages))
         self._owner: dict[int, str] = {}
+        self._nonce_guard: dict[int, sealed_guard.NonceSpanGuard] = {}
         self.stats = {"allocs": 0, "frees": 0, "peak_live": 0,
-                      "alloc_failures": 0}
+                      "alloc_failures": 0,
+                      # §3.4 cost-model accounting (ciphertext bytes run
+                      # through seal, k+v, excluding tag sidecars)
+                      "sealed_bytes_prefill": 0, "sealed_bytes_decode": 0,
+                      "sealed_bytes_swap": 0, "decode_tokens": 0,
+                      "page_closes": 0, "page_reopens": 0}
+
+    # -- sizes -----------------------------------------------------------
+    @property
+    def slot_bytes(self) -> int:
+        """Plaintext bytes of one token slot across all layers (k or v)."""
+        return (self.n_layers * self.n_kv_heads * self.hd
+                * jnp.dtype(self.dtype).itemsize)
+
+    @property
+    def page_bytes(self) -> int:
+        return self.slot_bytes * self.page_size
 
     # -- allocator -------------------------------------------------------
     @property
@@ -164,9 +355,20 @@ class PagedKVPool:
     def live_pages(self) -> int:
         return self.n_pages - 1 - len(self._free)
 
-    def alloc(self, n: int, owner: str, key_words, nonces) -> list[int]:
+    def alloc(self, n: int, owner: str, key_words, nonces,
+              span: int | None = None,
+              spent: list[int] | None = None) -> list[int]:
         """Take ``n`` pages for ``owner``; brand them with the owner's key
-        words and fresh per-page nonces.  Raises PoolExhausted if short."""
+        words and fresh per-page nonces.  Raises PoolExhausted if short.
+
+        ``span``: how many consecutive nonce values the caller reserved per
+        page — close/reopen bumps are budgeted against it (fail closed on
+        exhaustion rather than reusing keystream).  ``spent``: per-page
+        bumps already consumed from that reservation — a swapped-in page
+        carries its pre-swap nonce walk, so the budget survives re-alloc
+        instead of silently resetting.  New pages start OPEN with fill 0
+        when the pool runs open-page sealing.
+        """
         if n > len(self._free):
             self.stats["alloc_failures"] += 1
             raise PoolExhausted(f"need {n} pages, {len(self._free)} free")
@@ -176,11 +378,28 @@ class PagedKVPool:
         self.keys = self.keys.at[idx].set(kw)
         self.nonces = self.nonces.at[idx].set(
             jnp.asarray(nonces, jnp.uint32))
-        for p in pages:
+        if self.open_pages:
+            self.open_flags = self.open_flags.at[idx].set(True)
+            self.fill = self.fill.at[idx].set(0)
+        for i, p in enumerate(pages):
             self._owner[p] = owner
+            self._nonce_guard[p] = sealed_guard.NonceSpanGuard(
+                span=span if span else self.page_size + 2,
+                spent=spent[i] if spent else 0)
         self.stats["allocs"] += n
         self.stats["peak_live"] = max(self.stats["peak_live"], self.live_pages)
         return pages
+
+    def spend_nonce(self, page: int, n: int = 1) -> None:
+        """Budget a host-driven nonce bump (close/reopen) for ``page``."""
+        guard = self._nonce_guard.get(page)
+        if guard is not None:
+            guard.spend(n)
+
+    def nonce_spent(self, page: int) -> int:
+        """Bumps consumed from ``page``'s reserved nonce span so far."""
+        guard = self._nonce_guard.get(page)
+        return guard.spent if guard is not None else 0
 
     def free(self, pages: list[int]) -> None:
         """Return pages to the free list; un-brand them so a stale page table
@@ -192,8 +411,13 @@ class PagedKVPool:
         self.nonces = self.nonces.at[idx].set(0)
         self.k_tags = self.k_tags.at[idx].set(0)
         self.v_tags = self.v_tags.at[idx].set(0)
+        self.k_stags = self.k_stags.at[idx].set(0)
+        self.v_stags = self.v_stags.at[idx].set(0)
+        self.open_flags = self.open_flags.at[idx].set(False)
+        self.fill = self.fill.at[idx].set(0)
         for p in pages:
             self._owner.pop(p, None)
+            self._nonce_guard.pop(p, None)
             self._free.append(p)
         self.stats["frees"] += len(pages)
 
@@ -205,12 +429,31 @@ class PagedKVPool:
 
     # -- device state ----------------------------------------------------
     def write_pages(self, pages: list[int], kct, vct, ktags, vtags) -> None:
-        """Install freshly sealed page contents (e.g. after prefill)."""
+        """Install freshly sealed CLOSED page contents (swap-in, tests)."""
         idx = jnp.asarray(pages, jnp.int32)
         self.k_ct = self.k_ct.at[idx].set(kct)
         self.v_ct = self.v_ct.at[idx].set(vct)
         self.k_tags = self.k_tags.at[idx].set(ktags)
         self.v_tags = self.v_tags.at[idx].set(vtags)
+        self.open_flags = self.open_flags.at[idx].set(False)
+        self.fill = self.fill.at[idx].set(0)
+
+    def mark_open(self, pages: list[int], fill: int = 0) -> None:
+        """Trusted-side state flip: pages become OPEN with ``fill`` written
+        slots.  No crypto — callers either just allocated the pages (fill 0)
+        or reopened them through ``reopen_page`` (which re-sealed)."""
+        if not pages:
+            return
+        idx = jnp.asarray(pages, jnp.int32)
+        self.open_flags = self.open_flags.at[idx].set(True)
+        self.fill = self.fill.at[idx].set(fill)
+
+    def mark_closed(self, pages: list[int]) -> None:
+        if not pages:
+            return
+        idx = jnp.asarray(pages, jnp.int32)
+        self.open_flags = self.open_flags.at[idx].set(False)
+        self.fill = self.fill.at[idx].set(0)
 
     def export_pages(self, pages: list[int]) -> tuple[dict, np.ndarray]:
         """Verbatim host copies of sealed pages for the spill store.
@@ -233,8 +476,10 @@ class PagedKVPool:
     def arrays(self) -> tuple:
         """The pool state threaded through the jitted decode step."""
         return (self.k_ct, self.v_ct, self.k_tags, self.v_tags,
-                self.nonces, self.keys)
+                self.k_stags, self.v_stags, self.nonces, self.keys,
+                self.open_flags, self.fill)
 
     def update_arrays(self, arrays: tuple) -> None:
         (self.k_ct, self.v_ct, self.k_tags, self.v_tags,
-         self.nonces, self.keys) = arrays
+         self.k_stags, self.v_stags, self.nonces, self.keys,
+         self.open_flags, self.fill) = arrays

@@ -2,10 +2,19 @@
 
 Requests of any length join an admission queue ordered by (priority desc,
 arrival), claim a free *slot* (a lane of the jitted decode step) plus enough
-KV pages for prompt + generation, run one per-request prefill, and then ride
-the shared decode step until they finish — joining and leaving at step
-granularity while other requests keep decoding (vLLM-style continuous
-batching, here with per-tenant sealing).
+KV pages for prompt + generation, prefill their prompt in fixed-size
+*chunks* batched across admitted requests, and then ride the shared decode
+step until they finish — joining and leaving at step granularity while
+other requests keep decoding (vLLM-style continuous batching, here with
+per-tenant sealing).
+
+Chunked batched prefill: a scheduler step is (admit -> prefill-chunk ->
+decode).  All requests in the "prefilling" state advance by one
+``prefill_chunk``-token chunk in a single jitted call, spliced between the
+running batch's decode steps.  Under bursty admission this bounds how long
+any waiter (and the running decode batch) stalls behind someone else's long
+prompt: TTFT is paid in chunk-sized installments instead of one monolithic
+prefill per request at admission.
 
 Admission reserves a request's full page budget up front, so a running
 request can never be starved of pages mid-decode by later arrivals.  What
@@ -50,10 +59,12 @@ class Request:
     prompt: np.ndarray              # [S] int32
     max_new: int
     priority: int = 0               # higher preempts lower
-    status: str = "queued"          # queued | running | swapped | done | poisoned
+    status: str = "queued"          # queued | prefilling | running | swapped
+                                    # | done | poisoned
     tokens_out: list = dataclasses.field(default_factory=list)
     slot: int = -1
     pages: list = dataclasses.field(default_factory=list)
+    prefill_pos: int = 0            # prompt tokens already in the cache
     t_submit: float = 0.0
     t_first: float = 0.0            # first-token (prefill) completion time
     t_last: float = 0.0             # last progress (token / admission) time
@@ -61,6 +72,8 @@ class Request:
     swaps_out: int = 0
     swaps_in: int = 0
     swap_nonces: np.ndarray | None = None   # enclave-retained page nonces
+    swap_spent: list | None = None  # per-page nonce-span bumps consumed
+    resume_prefill: bool = False    # swapped out mid-prefill
 
     @property
     def prompt_len(self) -> int:
@@ -68,8 +81,13 @@ class Request:
 
     @property
     def seq_len(self) -> int:
-        """KV positions currently stored (prompt + emitted - 1 pending)."""
-        return self.prompt_len + max(0, len(self.tokens_out) - 1)
+        """KV positions currently stored.
+
+        During prefill this is the chunk high-water mark; afterwards it is
+        prompt + emitted - 1 (the latest token's KV lands on its decode)."""
+        if not self.tokens_out:
+            return self.prefill_pos
+        return self.prompt_len + len(self.tokens_out) - 1
 
     @property
     def finished(self) -> bool:
@@ -79,10 +97,12 @@ class Request:
 class Scheduler:
     def __init__(self, engine: PagedEngine, pool: PagedKVPool,
                  sessions: SessionManager, max_slots: int, max_pages: int,
-                 store: SealedStore | None = None):
+                 store: SealedStore | None = None, provider=None):
         self.engine = engine
         self.pool = pool
         self.sessions = sessions
+        self.provider = provider    # provider SecureChannel: MACs the
+                                    # batched prefill-chunk dispatch
         self.max_slots = max_slots
         self.max_pages = max_pages
         self.store = store if store is not None else SealedStore()
@@ -92,6 +112,8 @@ class Scheduler:
         self._next_rid = 1
         self.swap_stats = {"swap_outs": 0, "swap_ins": 0,
                            "swapped_bytes": 0}
+        self.prefill_stats = {"chunks": 0, "chunk_lanes": 0,
+                              "chunk_tokens": 0}
 
     # -- submission ------------------------------------------------------
     def required_pages(self, req: Request) -> int:
@@ -137,6 +159,7 @@ class Scheduler:
         events = {"admitted": [], "emitted": [], "finished": [],
                   "poisoned": [], "preempted": [], "resumed": []}
         self._admit(events)
+        self._prefill_step(events)
         self._decode(events)
         return events
 
@@ -192,20 +215,75 @@ class Scheduler:
         ps = self.pool.page_size
         nonces = [ch.fresh_nonce(span=ps + 2) for _ in range(n_pages)]
         req.pages = self.pool.alloc(n_pages, req.tenant_id,
-                                    ch.key_words, nonces)
+                                    ch.key_words, nonces, span=ps + 2)
         req.slot = slot
-        req.status = "running"
+        req.status = "prefilling"
+        req.prefill_pos = 0
+        req.t_last = time.monotonic()
         self.slots[slot] = req
-        # Rule 3: the tenant's own channel MACs its prefill descriptor
-        tok = ch.launch(
-            self.engine.prefill,
-            {"op": "paged_prefill", "rid": req.rid,
-             "tenant": req.tenant_id, "len": req.prompt_len,
-             "pages": list(req.pages)},
-            req.prompt, req.pages)
-        self.sessions.note_launch(req.tenant_id)
-        req.t_first = time.monotonic()
-        self._record_token(req, tok, events)
+
+    # -- chunked batched prefill ----------------------------------------
+    def _prefill_step(self, events: dict) -> None:
+        """Advance every prefilling slot by one chunk, in one batched call.
+
+        A prompt shorter than the chunk completes immediately (its first
+        token is recorded and it joins the decode batch this very step);
+        longer prompts pay their prefill in installments so a burst of
+        arrivals never serializes whole prompts in front of each other.
+        """
+        lanes = [r for r in self.slots
+                 if r is not None and r.status == "prefilling"]
+        if not lanes:
+            return
+        B, P = self.max_slots, self.max_pages
+        C = self.engine.prefill_chunk
+        tokens = np.zeros((B, C), np.int32)
+        start = np.zeros((B,), np.int32)
+        valid = np.ones((B,), np.int32)         # >=1 keeps idle slices legal
+        active = np.zeros((B,), bool)
+        page_tables = np.full((B, P), SCRATCH_PAGE, np.int32)
+        lane_desc = []
+        for r in lanes:
+            b = r.slot
+            chunk = r.prompt[r.prefill_pos:r.prefill_pos + C]
+            tokens[b, :len(chunk)] = chunk
+            start[b] = r.prefill_pos
+            valid[b] = len(chunk)
+            active[b] = True
+            page_tables[b, :len(r.pages)] = r.pages
+            desc = {"rid": r.rid, "tenant": r.tenant_id,
+                    "start": int(r.prefill_pos), "len": int(len(chunk)),
+                    "pages": list(r.pages)}
+            # Rule 3, tenant side: each tenant's channel attests the chunk
+            # range and pages being advanced on its behalf
+            self.sessions.channel(r.tenant_id).launch(
+                lambda: None, {"op": "prefill_chunk", **desc})
+            self.sessions.note_launch(r.tenant_id)
+            lane_desc.append(desc)
+        # Rule 3, dispatch side: the batched step runs under the provider's
+        # MACed launch whose descriptor binds every lane — the verified
+        # descriptor gates the compute, as the per-request prefill did
+        launch = (self.provider.launch if self.provider is not None
+                  else lambda fn, _desc, *a: fn(*a))
+        tok, ok = launch(
+            self.engine.chunk_prefill,
+            {"op": "prefill_chunk_batch", "lanes": lane_desc},
+            tokens, start, valid, active, page_tables)
+        self.prefill_stats["chunks"] += 1
+        self.prefill_stats["chunk_lanes"] += len(lanes)
+        self.prefill_stats["chunk_tokens"] += int(
+            sum(valid[r.slot] for r in lanes))
+        now = time.monotonic()
+        for r in lanes:
+            b = r.slot
+            r.prefill_pos += int(valid[b])
+            r.t_last = now
+            if not bool(ok[b]):
+                self._record_token(r, TOKEN_POISON, events, ok=False)
+            elif r.prefill_pos >= r.prompt_len:
+                r.status = "running"
+                r.t_first = now
+                self._record_token(r, int(tok[b]), events)
 
     def _swap_out(self, victim: Request, events: dict) -> None:
         """Move a running request's sealed pages into the host-tier store.
@@ -215,9 +293,29 @@ class Scheduler:
         they are what binds the store bytes to this exact page version, so a
         tampered or replayed store object fails the nonce-bound page MAC at
         swap-in and poisons only this request.
+
+        An OPEN tail page must close first (page-close MAC): the store only
+        ever holds closed pages, so a swap object is self-contained under
+        the whole-page tags + retained nonces and the slice-tag sidecar
+        never leaves the pool.
         """
+        if self.engine.open_pages:
+            tail_fill = victim.seq_len % self.pool.page_size
+            if tail_fill:
+                tail = victim.pages[victim.seq_len // self.pool.page_size]
+                if not self.engine.close_page(tail, account="swap"):
+                    # tampered open page caught at the close: poison the
+                    # owner instead of swapping garbage out (fail closed)
+                    self._poison_unreadable(victim, events)
+                    return
+        victim.resume_prefill = victim.status == "prefilling"
         pages = list(victim.pages)
         chunks, victim.swap_nonces = self.pool.export_pages(pages)
+        # the nonce-span budget walks with the page across the swap: the
+        # retained nonces keep their accumulated bumps, so the guard must
+        # keep its accumulated spend too (else repeated preemption could
+        # silently overflow the reserved lane — keystream reuse)
+        victim.swap_spent = [self.pool.nonce_spent(p) for p in pages]
         victim.swaps_out += 1
         ch = self.sessions.channel(victim.tenant_id)
         self.store.put(
@@ -257,16 +355,31 @@ class Scheduler:
         n_pages = len(req.swap_nonces)
         req.pages = self.pool.alloc(
             n_pages, req.tenant_id,
-            self.sessions.channel(req.tenant_id).key_words, req.swap_nonces)
+            self.sessions.channel(req.tenant_id).key_words, req.swap_nonces,
+            span=self.pool.page_size + 2, spent=req.swap_spent)
         self.pool.write_pages(req.pages, chunks["k_ct"], chunks["v_ct"],
                               chunks["k_tags"], chunks["v_tags"])
         self.store.delete(swap_object_id(req.rid))
         req.swaps_in += 1
         self.swap_stats["swap_ins"] += 1
         req.slot = slot
-        req.status = "running"
+        req.status = "prefilling" if req.resume_prefill else "running"
         req.t_last = time.monotonic()
         self.slots[slot] = req
+        if self.engine.open_pages:
+            # restore the open-page discipline: the partial tail page
+            # reopens (verify close MAC, re-seal, fresh slice tags) and
+            # pages not yet written revert to OPEN/empty so decode and
+            # prefill chunks can keep appending at O(bytes written)
+            ps = self.pool.page_size
+            tail_fill = req.seq_len % ps
+            n_written = -(-req.seq_len // ps)
+            if tail_fill:
+                if not self.engine.reopen_page(
+                        req.pages[req.seq_len // ps], tail_fill):
+                    self._poison_unreadable(req, events)
+                    return
+            self.pool.mark_open(req.pages[n_written:])
         events["resumed"].append(req.rid)
 
     def _fetch_swap_chunks(self, req: Request) -> dict | None:
@@ -297,7 +410,8 @@ class Scheduler:
 
     # -- decode ----------------------------------------------------------
     def _decode(self, events: dict) -> None:
-        live = [r for r in self.slots if r is not None]
+        live = [r for r in self.slots
+                if r is not None and r.status == "running"]
         if not live:
             return
         B, P = self.max_slots, self.max_pages
@@ -307,6 +421,7 @@ class Scheduler:
         active = np.zeros((B,), bool)
         page_tables = np.full((B, P), SCRATCH_PAGE, np.int32)
         write_pp = np.full((B,), SCRATCH_PAGE, np.int32)
+        writes = []                 # (req, page, slot written this step)
         for r in live:
             b = r.slot
             tokens[b] = r.tokens_out[-1]
@@ -314,12 +429,20 @@ class Scheduler:
             active[b] = True
             page_tables[b, :len(r.pages)] = r.pages
             write_pp[b] = r.pages[r.seq_len // ps]
+            writes.append((r, int(write_pp[b]), r.seq_len % ps))
         tok, ok = self.engine.decode_step(tokens, seq_lens, active,
                                           page_tables, write_pp)
         for r in live:
             self.sessions.note_launch(r.tenant_id)
             self._record_token(r, int(tok[r.slot]), events,
                                ok=bool(ok[r.slot]))
+        if self.engine.open_pages:
+            # a tail page whose last slot was just written CLOSES: slice
+            # tags fold into the page-close MAC, the nonce bumps once
+            for r, page, slot in writes:
+                if slot == ps - 1 and r.status == "running":
+                    if not self.engine.close_page(page):
+                        self._poison_unreadable(r, events)
 
     def _record_token(self, req: Request, tok: int, events: dict,
                       ok: bool = True) -> None:

@@ -14,11 +14,14 @@ installs the new key via ``SecureChannel.rekey`` — the epoch bump makes
 old-key nonces dead.
 
 Warm state: when a SealedStore is attached, per-tenant bookkeeping (launch
-counter, rotation count, last nonce epoch) persists as small store objects.
-A re-registered tenant restores its counters and — critically — advances its
-channel's nonce epoch past the recorded one, so a gateway restart can never
-re-walk nonce lanes the previous incarnation already spent.  The warm state
-holds no secrets (keys come from a fresh handshake every time).
+counter, rotation count, last nonce epoch, last verified Rule-3 register
+nonce) persists as small store objects.  A re-registered tenant restores its
+counters and — critically — advances its channel's nonce epoch past the
+recorded one, so a gateway restart can never re-walk nonce lanes the
+previous incarnation already spent; the Rule-3 register file likewise
+resumes at the last verified launch nonce instead of restarting at 0, so a
+replayed pre-restart launch stream stays stale on the device side.  The
+warm state holds no secrets (keys come from a fresh handshake every time).
 """
 from __future__ import annotations
 
@@ -117,6 +120,7 @@ class SessionManager:
             warm = manifest["meta"]
             launches = int(warm.get("launches", 0))
             rotations = int(warm.get("rotations", 0))
+            reg_nonce = int(warm.get("reg_nonce", 0))
             # never re-walk the previous incarnation's nonce lanes
             sess.channel.advance_epoch(int(warm.get("epoch", 0)) + 1)
         except (StoreError, trust.SecurityError, KeyError, TypeError,
@@ -124,6 +128,10 @@ class SessionManager:
             return
         sess.launches = max(0, launches)
         sess.rotations = max(0, rotations)
+        # Rule-3 warm restart: resume the register nonce lane at the last
+        # verified launch, so the device side never restarts at 0 accepting
+        # an arbitrary forward (replayable) nonce stream.
+        sess.channel.restore_register_floor(reg_nonce)
 
     def _persist_warm_state(self, sess: TenantSession) -> None:
         if self.store is None:
@@ -131,12 +139,14 @@ class SessionManager:
         base = self.store.manifest(warm_object_id(sess.tenant_id))
         self._warm_seq = max(self._warm_seq + 1,
                              (base["freshness"] + 1) if base else 0)
+        regs = sess.channel.device_regs
         self.store.put(
             warm_object_id(sess.tenant_id), sess.tenant_id, {},
             kind=WARM_KIND, freshness=self._warm_seq,
             nonce_epoch=sess.channel.epoch,
             meta={"launches": sess.launches, "rotations": sess.rotations,
-                  "epoch": sess.channel.epoch})
+                  "epoch": sess.channel.epoch,
+                  "reg_nonce": regs.last_nonce if regs else 0})
 
     # -- launch accounting + rotation -----------------------------------
     def note_launch(self, tenant_id: str, n: int = 1) -> None:

@@ -1,0 +1,44 @@
+"""The architecture book must exist and its code references must resolve.
+
+Runs the same checker as the CI docs job (tools/check_docs.py), plus a
+negative test proving the checker actually catches dangling references.
+"""
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_docs_exist_and_are_linked_from_readme():
+    for rel in ("docs/ARCHITECTURE.md", "docs/SERVING.md",
+                "benchmarks/README.md", "README.md"):
+        assert (ROOT / rel).is_file(), f"{rel} missing"
+    readme = (ROOT / "README.md").read_text()
+    assert "docs/ARCHITECTURE.md" in readme
+    assert "docs/SERVING.md" in readme
+    assert "benchmarks/README.md" in readme
+
+
+def test_doc_references_resolve():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_docs.py")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_checker_catches_dangling_references():
+    sys.path.insert(0, str(ROOT / "tools"))
+    try:
+        import check_docs
+    finally:
+        sys.path.pop(0)
+    assert check_docs.module_exists("repro.serve.kv_pager")
+    assert not check_docs.module_exists("repro.serve.no_such_module")
+    import tempfile
+    with tempfile.TemporaryDirectory(dir=ROOT) as td:
+        bad = pathlib.Path(td) / "bad.md"
+        bad.write_text("see `repro.not.a.module` and "
+                       "`src/repro/missing.py` and [x](nope.md)\n")
+        errors = check_docs.check_file(bad)
+    assert len(errors) == 3

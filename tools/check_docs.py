@@ -1,0 +1,91 @@
+#!/usr/bin/env python
+"""Docs reference checker — keeps the architecture book honest.
+
+Scans the documentation set (docs/*.md, README.md, benchmarks/README.md)
+for code references and verifies each against the tree:
+
+  * dotted module paths (``repro.serve.kv_pager``) must resolve to a module
+    or package under src/;
+  * ``python -m repro.x.y`` commands must resolve the same way;
+  * backticked file paths (``src/repro/core/cipher.py``, ``docs/SERVING.md``,
+    ``benchmarks/run.py``, ``path.py::symbol``) must exist;
+  * markdown links to local files must point at existing files.
+
+Exit status is non-zero with a listing of every dangling reference, so CI
+fails when a doc mentions a module that moved.  Run it directly:
+
+    python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_FILES = sorted(
+    list((ROOT / "docs").glob("*.md"))
+    + [ROOT / "README.md", ROOT / "benchmarks" / "README.md"])
+
+MODULE_RE = re.compile(r"`(repro(?:\.[A-Za-z_][A-Za-z_0-9]*)+)`")
+PYTHON_M_RE = re.compile(r"python\s+-m\s+(repro(?:\.[A-Za-z_][A-Za-z_0-9]*)+)")
+# backticked path-ish tokens: must contain a '/' and look like a repo path
+PATH_RE = re.compile(r"`((?:src|docs|tests|benchmarks|examples|tools)"
+                     r"/[A-Za-z_0-9./\-]+?)(?:::[A-Za-z_0-9.]+)?`")
+LINK_RE = re.compile(r"\]\(([^)#]+?)(?:#[^)]*)?\)")
+
+
+def module_exists(dotted: str) -> bool:
+    rel = Path("src", *dotted.split("."))
+    return ((ROOT / rel).with_suffix(".py").is_file()
+            or (ROOT / rel / "__init__.py").is_file())
+
+
+def check_file(path: Path) -> list[str]:
+    errors = []
+    text = path.read_text()
+    rel = path.relative_to(ROOT)
+    for m in MODULE_RE.finditer(text):
+        if not module_exists(m.group(1)):
+            errors.append(f"{rel}: module `{m.group(1)}` does not resolve")
+    for m in PYTHON_M_RE.finditer(text):
+        if not module_exists(m.group(1)):
+            errors.append(f"{rel}: `python -m {m.group(1)}` does not resolve")
+    for m in PATH_RE.finditer(text):
+        target = ROOT / m.group(1)
+        if not target.exists() and not target.with_suffix("").is_dir():
+            errors.append(f"{rel}: path `{m.group(1)}` does not exist")
+    for m in LINK_RE.finditer(text):
+        href = m.group(1).strip()
+        if "://" in href or href.startswith("mailto:"):
+            continue
+        target = (path.parent / href).resolve()
+        if not target.exists():
+            errors.append(f"{rel}: link target {href} does not exist")
+    return errors
+
+
+def main() -> int:
+    missing_docs = [p for p in DOC_FILES if not p.is_file()]
+    if missing_docs:
+        for p in missing_docs:
+            print(f"MISSING DOC: {p.relative_to(ROOT)}")
+        return 1
+    errors = []
+    for path in DOC_FILES:
+        errors.extend(check_file(path))
+    if errors:
+        print(f"{len(errors)} dangling doc reference(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    n_refs = sum(
+        len(MODULE_RE.findall(p.read_text()))
+        + len(PATH_RE.findall(p.read_text()))
+        + len(LINK_RE.findall(p.read_text())) for p in DOC_FILES)
+    print(f"docs OK: {len(DOC_FILES)} files, {n_refs} references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
