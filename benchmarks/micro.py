@@ -78,11 +78,21 @@ def trust_bench(print_csv=True):
     return [("trust_handshake", dt * 1e6, "once/session")]
 
 
-def run(print_csv=True):
+def run(print_csv=True, artifact: str | None = "BENCH_micro.json"):
     out = []
     out += seal_throughput(print_csv)
     out += chunk_sweep(print_csv)
     out += trust_bench(print_csv)
+    if artifact:
+        import json
+        rows = [{"name": n, "us_per_call": float(us),
+                 "derived": d if isinstance(d, str) else float(d)}
+                for n, us, d in out]
+        with open(artifact, "w") as f:
+            json.dump({"benchmark": "micro", "unix_time": time.time(),
+                       "rows": rows}, f, indent=1)
+        if print_csv:
+            print(f"artifact: {artifact}")
     return out
 
 

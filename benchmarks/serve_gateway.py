@@ -29,10 +29,29 @@ sealed-bytes-per-decode-token against the whole-page baseline.
 Smoke-sized model so the numbers measure the *protocol machinery* (seal /
 unseal / MAC per page, variable-occupancy gather, verbatim swap copies)
 rather than raw FLOPs.
+
+Artifacts (written to the working directory, see docs/OBSERVABILITY.md):
+
+    BENCH_serve_gateway.json   every table row + full metric snapshots
+    BENCH_trace.json           Chrome trace_event object from the traced
+                               trusted/preempt cell — loads in Perfetto
+    BENCH_audit.jsonl          that cell's hash-chained audit log + trailer
+    BENCH_audit.key            the derived verification key (hex) for
+                               tools/verify_audit.py
 """
 from __future__ import annotations
 
+import json
+import time
+
 import numpy as np
+
+
+def _jsonable(o):
+    """json.dump default: numpy scalars -> python numbers."""
+    if hasattr(o, "item"):
+        return o.item()
+    raise TypeError(f"not JSON serializable: {type(o).__name__}")
 
 
 def _submit_steady(gw, vocab, tenants, requests, max_new, seed):
@@ -69,7 +88,7 @@ def _submit_burst(gw, vocab, tenants, requests, max_new, seed):
 
 def run(arch: str = "granite-3-2b", tenants: int = 3, requests: int = 6,
         max_new: int = 8, slots: int = 4, burst: bool = True,
-        burst_chunks: tuple = (0, 8)) -> None:
+        burst_chunks: tuple = (0, 8), out_dir: str = ".") -> dict:
     import jax
 
     from repro import configs
@@ -85,21 +104,35 @@ def run(arch: str = "granite-3-2b", tenants: int = 3, requests: int = 6,
               f"{'swaps':>7} | {'occ %':>6} | {'pages':>5}")
     print(header)
     print("-" * len(header))
+    result = {"benchmark": "serve_gateway", "arch": arch,
+              "unix_time": time.time(),
+              "params": {"tenants": tenants, "requests": requests,
+                         "max_new": max_new, "slots": slots},
+              "grid": [], "burst": [], "audit": None, "artifacts": {}}
     scenarios = (("steady", _submit_steady, dict(n_pages=64)),
                  ("preempt", _submit_preempt, dict(n_pages=64, slots=2)))
     for mode in ("off", "trusted"):
         for name, submit, knobs in scenarios:
+            # the trusted/preempt cell is the observability showcase: it
+            # records the trace and its audit log becomes the BENCH artifact
+            traced = mode == "trusted" and name == "preempt"
             gw = SecureGateway(cfg, params, security=mode,
                                max_slots=knobs.get("slots", slots),
                                page_size=8, n_pages=knobs["n_pages"],
-                               max_pages_per_seq=4)
+                               max_pages_per_seq=4, trace=traced)
             # warm-up pass compiles the graphs; re-run fresh traffic for timing
             submit(gw, cfg.vocab, tenants, requests, max_new, seed=0)
             gw.drain()
             gw.reset_metrics()
+            if traced:
+                gw.tracer.reset()       # trace the timed window only
             submit(gw, cfg.vocab, tenants, requests, max_new, seed=1)
             gw.drain()
             m = gw.metrics()
+            result["grid"].append(
+                {"mode": mode, "scenario": name, "metrics": m})
+            if traced:
+                result["audit"] = _export_obs(gw, result, out_dir)
             swaps = f"{m['swap_outs']}/{m['swap_ins']}"
             print(f"{mode:>8} | {name:>8} | {m['tok_per_s']:8.1f} | "
                   f"{m['p50_token_ms']:8.1f} | {m['p95_token_ms']:8.1f} | "
@@ -107,15 +140,39 @@ def run(arch: str = "granite-3-2b", tenants: int = 3, requests: int = 6,
                   f"| {swaps:>7} | {m['pool_occupancy_pct']:6.1f} | "
                   f"{m['kv_pages_peak']:5d}")
     if burst:
-        run_burst(cfg, params, tenants=tenants, requests=requests,
-                  max_new=max_new, slots=slots, chunks=burst_chunks)
+        result["burst"] = run_burst(
+            cfg, params, tenants=tenants, requests=requests,
+            max_new=max_new, slots=slots, chunks=burst_chunks)
+    path = f"{out_dir}/BENCH_serve_gateway.json"
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1, default=_jsonable)
+    result["artifacts"]["results"] = path
+    print(f"\nartifacts: {', '.join(sorted(result['artifacts'].values()))}")
+    return result
+
+
+def _export_obs(gw, result: dict, out_dir: str) -> dict:
+    """Export the traced cell's trace + audit artifacts; -> audit summary."""
+    trace_path = f"{out_dir}/BENCH_trace.json"
+    audit_path = f"{out_dir}/BENCH_audit.jsonl"
+    key_path = f"{out_dir}/BENCH_audit.key"
+    n_events = gw.export_trace(trace_path, fmt="chrome")
+    n_records = gw.export_audit(audit_path, key_path=key_path)
+    report = gw.verify_audit()
+    if not report["ok"]:
+        raise RuntimeError(f"audit chain failed verification: {report}")
+    result["artifacts"].update(
+        {"trace": trace_path, "audit": audit_path, "audit_key": key_path})
+    return {"records": n_records, "trace_events": n_events,
+            "kinds": gw.audit.kinds(), "verify": report}
 
 
 def run_burst(cfg, params, tenants: int = 3, requests: int = 6,
               max_new: int = 8, slots: int = 4,
-              chunks: tuple = (0, 8)) -> None:
+              chunks: tuple = (0, 8)) -> list:
     """Bursty admission: whole-page-reseal baseline vs open pages, at
-    several prefill chunk sizes (trusted mode, page_size 8)."""
+    several prefill chunk sizes (trusted mode, page_size 8).  Returns the
+    rows (one dict per variant, with the full metric snapshot)."""
     from repro.serve import SecureGateway
 
     print()
@@ -129,6 +186,7 @@ def run_burst(cfg, params, tenants: int = 3, requests: int = 6,
     variants = [("whole-page", False, 0)]
     variants += [("open-page", True, c) for c in chunks]
     baseline_bpt = None
+    rows = []
     for name, open_pages, chunk in variants:
         gw = SecureGateway(cfg, params, security="trusted",
                            max_slots=slots, page_size=8, n_pages=64,
@@ -145,9 +203,13 @@ def run_burst(cfg, params, tenants: int = 3, requests: int = 6,
             baseline_bpt = bpt
         ratio = baseline_bpt / bpt if bpt else float("inf")
         label = str(chunk) if chunk else "max"
+        rows.append({"write_back": name, "prefill_chunk": chunk,
+                     "vs_baseline": ratio if np.isfinite(ratio) else None,
+                     "metrics": m})
         print(f"{name:>12} | {label:>5} | {m['mean_ttft_ms']:8.1f} | "
               f"{m['prefill_chunk_occupancy_pct']:11.1f} | {bpt:12.1f} | "
               f"{ratio:10.2f}x | {m['page_closes']:6d}")
+    return rows
 
 
 if __name__ == "__main__":

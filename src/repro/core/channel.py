@@ -84,6 +84,8 @@ class SecureChannel:
     session_id: int = 0             # 0 => auto-assign a process-unique id
     epoch: int = 0                  # key epoch (bumped by rekey / wrap)
     _nonce_counter: int = 0
+    audit: Any = None               # obs.AuditLog; records launch verdicts
+    audit_tenant: str | None = None  # tenant attribution for audit records
 
     def __post_init__(self):
         if not self.session_id:
@@ -241,5 +243,18 @@ class SecureChannel:
             state, nonce, tag = self.host_regs.write(**descriptor)
             # the untrusted driver would carry (state, nonce, tag) via MMIO;
             # the device-side register file verifies before the core starts.
-            self.device_regs.commit(state, nonce, tag)
+            try:
+                self.device_regs.commit(state, nonce, tag)
+            except Exception as e:
+                if self.audit is not None:
+                    self.audit.append("launch_reject",
+                                      tenant=self.audit_tenant,
+                                      op=str(descriptor.get("op")),
+                                      nonce=int(nonce),
+                                      error=type(e).__name__)
+                raise
+            if self.audit is not None:
+                self.audit.append("launch", tenant=self.audit_tenant,
+                                  op=str(descriptor.get("op")),
+                                  nonce=int(nonce))
         return step_fn(*args, **kwargs)

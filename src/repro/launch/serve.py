@@ -30,7 +30,8 @@ def _run_gateway(cfg, params, args) -> None:
                        n_pages=args.pages, max_pages_per_seq=args.max_pages,
                        rotate_every=args.rotate_every,
                        open_pages=not args.whole_page_reseal,
-                       prefill_chunk=args.prefill_chunk)
+                       prefill_chunk=args.prefill_chunk,
+                       trace=bool(args.trace))
     rng = np.random.RandomState(0)
     rids = []
     for i in range(args.requests):
@@ -66,6 +67,16 @@ def _run_gateway(cfg, params, args) -> None:
           f"page closes {m['page_closes']} reopens {m['page_reopens']}")
     print(f"rotations {m['rotations']}  "
           f"launches verified: {m['launches_verified']}")
+    if args.trace:
+        n = gw.export_trace(args.trace, fmt="chrome")
+        print(f"trace: {args.trace} ({n} events — load at "
+              "https://ui.perfetto.dev)")
+    if args.audit:
+        n = gw.export_audit(args.audit, key_path=args.audit + ".key")
+        report = gw.verify_audit()
+        print(f"audit: {args.audit} ({n} records, key in "
+              f"{args.audit}.key) — chain "
+              f"{'OK' if report['ok'] else 'BROKEN: ' + str(report)}")
 
 
 def _run_fixed(cfg, params, args) -> None:
@@ -117,6 +128,12 @@ def main() -> None:
                          "decode token instead of slice-sealed open pages")
     ap.add_argument("--hi-every", type=int, default=0,
                     help="every Nth request is high priority (0 = never)")
+    ap.add_argument("--trace", default="",
+                    help="record a trace and write it here as a "
+                         "Perfetto-loadable Chrome trace_event file")
+    ap.add_argument("--audit", default="",
+                    help="export the hash-chained audit log (JSONL + "
+                         "<path>.key verification key) here")
     ap.add_argument("--security", default="trusted", choices=("trusted", "off"))
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full", dest="smoke", action="store_false")

@@ -1,0 +1,21 @@
+"""Observability for the secure serving stack: tracing, metrics, audit.
+
+Three independent parts, threaded through the gateway/scheduler/engine/pool
+and the trust substrate:
+
+  * ``trace``   — per-request lifecycle spans + per-step engine phase
+    timings, exportable as JSONL and Chrome trace_event (Perfetto);
+  * ``metrics`` — one typed registry (counters / gauges / histograms with
+    nearest-rank percentiles) behind ``SecureGateway.metrics()`` and a
+    Prometheus text exposition;
+  * ``audit``   — an append-only HMAC-chained log of security events
+    (attestations, rotations, launch verifications, page closes/reopens,
+    swaps, tamper poisonings) where truncation and in-place edits are
+    detectable by ``verify_chain()``.
+"""
+from .audit import (AuditError, AuditLog, derive_audit_key,  # noqa: F401
+                    verify_jsonl, verify_records)
+from .metrics import (Counter, Gauge, Histogram, MetricError,  # noqa: F401
+                      MetricsRegistry, StatsView)
+from .trace import (Tracer, chrome_trace, jsonl_to_chrome,  # noqa: F401
+                    request_tid, TID_ENGINE, TID_REQ_BASE)

@@ -143,8 +143,12 @@ class PagedEngine:
     max_slots: int
     max_pages: int                  # page-table columns per sequence
     prefill_chunk: int = 0          # tokens per prefill chunk (0 = max seq)
+    tracer: object = None           # obs.Tracer for engine phase spans
 
     def __post_init__(self):
+        if self.tracer is None:
+            from ..obs import Tracer
+            self.tracer = Tracer(enabled=False)
         if self.cfg.family not in ("dense",):
             raise ValueError(
                 f"PagedEngine supports dense transformers, got "
@@ -366,17 +370,18 @@ class PagedEngine:
         """
         active = np.asarray(active, bool)
         valid = np.asarray(valid, np.int32)
-        tok, ok, arrays = self._chunk_prefill(
-            self.params, jnp.asarray(tokens, jnp.int32),
-            jnp.asarray(start, jnp.int32), jnp.asarray(valid, jnp.int32),
-            jnp.asarray(active), jnp.asarray(page_tables, jnp.int32),
-            self.pool.arrays())
-        self.pool.update_arrays(arrays)
-        if self.pool.sealed:
-            pages_written = int(sum(-(-int(v) // self.pool.page_size)
-                                    for v, a in zip(valid, active) if a))
-            self.pool.stats["sealed_bytes_prefill"] += \
-                2 * self.pool.page_bytes * pages_written
+        n_lanes = int(active.sum())
+        with self.tracer.span("engine.chunk_prefill", cat="engine",
+                              args={"lanes": n_lanes}):
+            tok, ok, arrays = self._chunk_prefill(
+                self.params, jnp.asarray(tokens, jnp.int32),
+                jnp.asarray(start, jnp.int32), jnp.asarray(valid, jnp.int32),
+                jnp.asarray(active), jnp.asarray(page_tables, jnp.int32),
+                self.pool.arrays())
+            self.pool.update_arrays(arrays)
+        pages_written = int(sum(-(-int(v) // self.pool.page_size)
+                                for v, a in zip(valid, active) if a))
+        self.pool.note_prefill(pages_written)
         return np.asarray(tok), np.asarray(ok)
 
     # -- page close / reopen (open-page lifecycle) -----------------------
@@ -411,15 +416,15 @@ class PagedEngine:
             return True
         if not self.pool.sealed:
             self.pool.mark_closed([page])
-            self.pool.stats["page_closes"] += 1
+            self.pool.note_close(page, account, True)
             return True
-        self.pool.spend_nonce(page)
-        ok, arrays = self._close(self.pool.arrays(),
-                                 jnp.asarray(page, jnp.int32))
-        self.pool.update_arrays(arrays)
-        self.pool.stats["page_closes"] += 1
-        self.pool.stats[f"sealed_bytes_{account}"] += \
-            2 * self.pool.page_bytes
+        with self.tracer.span("engine.close_page", cat="engine",
+                              args={"page": int(page), "account": account}):
+            self.pool.spend_nonce(page)
+            ok, arrays = self._close(self.pool.arrays(),
+                                     jnp.asarray(page, jnp.int32))
+            self.pool.update_arrays(arrays)
+        self.pool.note_close(page, account, bool(ok))
         return bool(ok)
 
     def _reopen_impl(self, pool_arrays, page, fill_n):
@@ -447,15 +452,16 @@ class PagedEngine:
             return True
         if not self.pool.sealed:
             self.pool.mark_open([page], fill)
-            self.pool.stats["page_reopens"] += 1
+            self.pool.note_reopen(page, True)
             return True
-        self.pool.spend_nonce(page)
-        ok, arrays = self._reopen(self.pool.arrays(),
-                                  jnp.asarray(page, jnp.int32),
-                                  jnp.asarray(fill, jnp.int32))
-        self.pool.update_arrays(arrays)
-        self.pool.stats["page_reopens"] += 1
-        self.pool.stats["sealed_bytes_swap"] += 2 * self.pool.page_bytes
+        with self.tracer.span("engine.reopen_page", cat="engine",
+                              args={"page": int(page)}):
+            self.pool.spend_nonce(page)
+            ok, arrays = self._reopen(self.pool.arrays(),
+                                      jnp.asarray(page, jnp.int32),
+                                      jnp.asarray(fill, jnp.int32))
+            self.pool.update_arrays(arrays)
+        self.pool.note_reopen(page, bool(ok))
         return bool(ok)
 
     # -- decode ----------------------------------------------------------
@@ -577,16 +583,14 @@ class PagedEngine:
 
     def decode_step(self, tokens, seq_lens, active, page_tables, write_pp):
         """Host-side wrapper: threads the pool through the jitted body."""
-        tok, ok, arrays = self._decode(
-            self.params, jnp.asarray(tokens, jnp.int32),
-            jnp.asarray(seq_lens, jnp.int32), jnp.asarray(active, bool),
-            jnp.asarray(page_tables, jnp.int32),
-            jnp.asarray(write_pp, jnp.int32), self.pool.arrays())
-        self.pool.update_arrays(arrays)
         n_act = int(np.asarray(active, bool).sum())
-        if self.pool.sealed:
-            per = 2 * (self.pool.slot_bytes if self.open_pages
-                       else self.pool.page_bytes)
-            self.pool.stats["sealed_bytes_decode"] += n_act * per
-        self.pool.stats["decode_tokens"] += n_act
+        with self.tracer.span("engine.decode_step", cat="engine",
+                              args={"lanes": n_act}):
+            tok, ok, arrays = self._decode(
+                self.params, jnp.asarray(tokens, jnp.int32),
+                jnp.asarray(seq_lens, jnp.int32), jnp.asarray(active, bool),
+                jnp.asarray(page_tables, jnp.int32),
+                jnp.asarray(write_pp, jnp.int32), self.pool.arrays())
+            self.pool.update_arrays(arrays)
+        self.pool.note_decode(n_act)
         return np.asarray(tok), np.asarray(ok)

@@ -16,6 +16,16 @@ mutually-distrusting tenants on one trusted accelerator:
 API: ``submit`` / ``step`` / ``collect`` (+ ``drain``), with throughput,
 latency, preemption and pool-occupancy metrics aggregated per gateway and
 per tenant.
+
+Observability (src/repro/obs/, docs/OBSERVABILITY.md): every gateway owns
+
+  * one ``MetricsRegistry`` — all counters/gauges/histograms of the pool,
+    scheduler and gateway; ``metrics()`` is a snapshot of it and
+    ``metrics_text()`` the Prometheus exposition;
+  * one ``Tracer`` (``trace=True``) — request lifecycle + engine phase
+    spans, exported via ``export_trace`` (Perfetto-loadable);
+  * one ``AuditLog`` — an HMAC-chained record of every trust event,
+    keyed off the provider session; ``verify_audit()`` checks the chain.
 """
 from __future__ import annotations
 
@@ -24,6 +34,7 @@ import time
 import numpy as np
 
 from ..core.policy import SecurityConfig
+from ..obs import AuditLog, MetricsRegistry, Tracer, TID_ENGINE
 from ..store import SealedStore
 from .engine import PagedEngine
 from .kv_pager import PagedKVPool
@@ -39,7 +50,7 @@ class SecureGateway:
                  max_pages_per_seq: int = 4, rotate_every: int = 0,
                  chunk_words: int = 128, device_id: str = "tpu-0",
                  store: SealedStore | None = None, open_pages: bool = True,
-                 prefill_chunk: int = 0):
+                 prefill_chunk: int = 0, trace: bool = False):
         """open_pages: slice-seal the tail page of each sequence (per-token
         seal cost O(bytes written), paper §3.4) instead of re-sealing the
         whole page every decode step.  False keeps the legacy whole-page
@@ -47,7 +58,11 @@ class SecureGateway:
 
         prefill_chunk: tokens per batched prefill chunk (multiple of
         page_size; 0 = whole-prompt chunks, i.e. max_pages_per_seq pages).
-        Smaller chunks cut TTFT under bursty admission."""
+        Smaller chunks cut TTFT under bursty admission.
+
+        trace: record request-lifecycle and engine-phase trace events
+        (export with ``export_trace``); off by default — a disabled tracer
+        short-circuits every emit."""
         self.cfg = cfg
         sec = (SecurityConfig() if security == "trusted"
                else SecurityConfig.off())
@@ -56,44 +71,49 @@ class SecureGateway:
                                        rotate_every=rotate_every,
                                        store=self.store)
         provider = self.sessions.register(PROVIDER).channel
+        # the audit chain keys off the provider session (the same root of
+        # trust that MACs launch descriptors); it must exist before any
+        # tenant registers so every attest lands in the chain — the
+        # provider's own attest is emitted retroactively by attach_audit
+        self.audit = AuditLog(provider.key_bytes)
+        self.sessions.attach_audit(self.audit)
+        self.store.audit = self.audit
+        self.tracer = Tracer(enabled=trace)
+        self.tracer.name_process("secure-gateway")
+        self.tracer.name_thread(TID_ENGINE, "engine")
+        self.registry = MetricsRegistry()
         sealed = sec.enabled
         params_dev = provider.upload_tree(params) if sealed else params
         self.pool = PagedKVPool(
             n_pages=n_pages, page_size=page_size, n_layers=cfg.n_layers,
             n_kv_heads=cfg.n_kv_heads, hd=cfg.hd, dtype=cfg.act_dtype,
-            chunk_words=chunk_words, sealed=sealed, open_pages=open_pages)
+            chunk_words=chunk_words, sealed=sealed, open_pages=open_pages,
+            metrics=self.registry, audit=self.audit)
         self.engine = PagedEngine(
             cfg=cfg, params=params_dev, channel=provider, pool=self.pool,
             max_slots=max_slots, max_pages=max_pages_per_seq,
-            prefill_chunk=prefill_chunk)
+            prefill_chunk=prefill_chunk, tracer=self.tracer)
         self.scheduler = Scheduler(self.engine, self.pool, self.sessions,
                                    max_slots, max_pages_per_seq,
-                                   store=self.store, provider=provider)
-        self._steps = 0
+                                   store=self.store, provider=provider,
+                                   tracer=self.tracer, audit=self.audit)
         self._t_start = time.monotonic()
-        self._token_latency_ms: list[float] = []
-        self._per_tenant: dict[str, int] = {}
-        self._occupancy_sum = 0.0
-        self._occupancy_steps = 0
-        self._metrics_from_rid = 0
+        self._c_steps = self.registry.counter(
+            "gateway_steps_total", "scheduling steps this window")
+        self._h_token_lat = self.registry.histogram(
+            "token_latency_ms", "per-token step latency, ms")
+        self._h_occ = self.registry.histogram(
+            "pool_occupancy_ratio", "live/usable pages, sampled per step")
 
     def reset_metrics(self) -> None:
-        """Start a fresh measurement window (e.g. after a warm-up pass)."""
-        self._steps = 0
+        """Start a fresh measurement window (e.g. after a warm-up pass).
+
+        One call on the shared registry resets every *windowed* metric the
+        pool, scheduler and gateway registered — there is no per-object
+        reset list to drift out of sync.  Lifetime metrics (allocator
+        totals, peak-live gauge) are exempt by construction."""
         self._t_start = time.monotonic()
-        self._token_latency_ms.clear()
-        self._per_tenant.clear()
-        self._occupancy_sum = 0.0
-        self._occupancy_steps = 0
-        self.scheduler.swap_stats = {"swap_outs": 0, "swap_ins": 0,
-                                     "swapped_bytes": 0}
-        self.scheduler.prefill_stats = {"chunks": 0, "chunk_lanes": 0,
-                                        "chunk_tokens": 0}
-        for k in ("sealed_bytes_prefill", "sealed_bytes_decode",
-                  "sealed_bytes_swap", "decode_tokens", "page_closes",
-                  "page_reopens"):
-            self.pool.stats[k] = 0
-        self._metrics_from_rid = self.scheduler._next_rid
+        self.registry.reset()
 
     # -- tenant + request lifecycle -------------------------------------
     def register_tenant(self, tenant_id: str):
@@ -118,20 +138,23 @@ class SecureGateway:
         t0 = time.monotonic()
         provider = self.sessions.channel(PROVIDER)
         active = [r.rid for r in self.scheduler.active]
-        events = provider.launch(
-            self.scheduler.step,
-            {"op": "serve_step", "step": self._steps,
-             "queued": len(self.scheduler.queue), "active": active})
+        step_no = int(self._c_steps.value)
+        with self.tracer.span("serve_step", cat="serve",
+                              args={"step": step_no, "active": len(active),
+                                    "queued": len(self.scheduler.queue)}):
+            events = provider.launch(
+                self.scheduler.step,
+                {"op": "serve_step", "step": step_no,
+                 "queued": len(self.scheduler.queue), "active": active})
         dt_ms = (time.monotonic() - t0) * 1e3
-        self._steps += 1
+        self._c_steps.inc()
         usable = max(1, self.pool.n_pages - 1)
-        self._occupancy_sum += self.pool.live_pages / usable
-        self._occupancy_steps += 1
+        self._h_occ.observe(self.pool.live_pages / usable)
         for rid, _tok in events["emitted"]:
-            self._token_latency_ms.append(dt_ms)
+            self._h_token_lat.observe(dt_ms)
             req = self.scheduler.requests[rid]
-            self._per_tenant[req.tenant_id] = \
-                self._per_tenant.get(req.tenant_id, 0) + 1
+            self.registry.counter("tokens_total", "tokens emitted",
+                                  tenant=req.tenant_id).inc()
         return events
 
     def collect(self, rid: int, max_steps: int = 100_000) -> np.ndarray:
@@ -162,41 +185,36 @@ class SecureGateway:
 
     # -- metrics ---------------------------------------------------------
     def metrics(self) -> dict:
-        lat = sorted(self._token_latency_ms)
-
-        def pct(p):
-            return lat[min(len(lat) - 1, int(p * len(lat)))] if lat else 0.0
-
+        """Snapshot of the measurement window — same keys as ever, now
+        computed from the registry (percentiles are nearest-rank; the old
+        ad-hoc ``int(p * len)`` indexing biased small windows low)."""
+        lat = self._h_token_lat
         elapsed = time.monotonic() - self._t_start
-        n_tok = len(lat)
+        n_tok = lat.count
         rotations = sum(s.rotations for s in
                         (self.sessions.get(t) for t in self.sessions.tenants))
-        window = [r for r in self.scheduler.requests.values()
-                  if r.t_first > 0 and r.rid >= self._metrics_from_rid]
-        ttfts = [(r.t_first - r.t_submit) * 1e3 for r in window]
-        pre_ttfts = [(r.t_first - r.t_submit) * 1e3 for r in window
-                     if r.swaps_out > 0]
-        swaps = self.scheduler.swap_stats
-        occ = (self._occupancy_sum / self._occupancy_steps
-               if self._occupancy_steps else 0.0)
-        pf = self.scheduler.prefill_stats
+        sched = self.scheduler
+        swaps = sched.swap_stats
+        pf = sched.prefill_stats
         ps_stats = self.pool.stats
         dec_tok = ps_stats["decode_tokens"]
+        per_tenant = {
+            dict(labels)["tenant"]: m.value
+            for labels, m in self.registry.family("tokens_total").items()}
         return {
-            "steps": self._steps,
+            "steps": int(self._c_steps.value),
             "tokens": n_tok,
             "elapsed_s": elapsed,
             "tok_per_s": n_tok / elapsed if elapsed > 0 else 0.0,
-            "p50_token_ms": pct(0.50),
-            "p95_token_ms": pct(0.95),
-            "mean_ttft_ms": sum(ttfts) / len(ttfts) if ttfts else 0.0,
-            "preempted_ttft_ms": (sum(pre_ttfts) / len(pre_ttfts)
-                                  if pre_ttfts else 0.0),
-            "preempted_requests": len(pre_ttfts),
+            "p50_token_ms": lat.percentile(0.50),
+            "p95_token_ms": lat.percentile(0.95),
+            "mean_ttft_ms": sched._h_ttft.mean,
+            "preempted_ttft_ms": sched._h_pre_ttft.mean,
+            "preempted_requests": sched._h_pre_ttft.count,
             "swap_outs": swaps["swap_outs"],
             "swap_ins": swaps["swap_ins"],
             "swapped_bytes": swaps["swapped_bytes"],
-            "pool_occupancy_pct": 100.0 * occ,
+            "pool_occupancy_pct": 100.0 * self._h_occ.mean,
             # chunked batched prefill
             "prefill_chunks": pf["chunks"],
             "prefill_chunk_tokens": pf["chunk_tokens"],
@@ -214,10 +232,35 @@ class SecureGateway:
                 else 0.0),
             "page_closes": ps_stats["page_closes"],
             "page_reopens": ps_stats["page_reopens"],
-            "tokens_per_tenant": dict(self._per_tenant),
+            "tokens_per_tenant": per_tenant,
             "kv_pages_peak": self.pool.stats["peak_live"],
             "kv_pages_free": self.pool.free_pages,
             "rotations": rotations,
             "launches_verified": self.sessions.channel(
                 PROVIDER).device_regs.last_nonce,
         }
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of the whole registry."""
+        return self.registry.to_prometheus()
+
+    # -- trace + audit export --------------------------------------------
+    def export_trace(self, path: str, fmt: str = "chrome") -> int:
+        """Write the trace buffer: ``chrome`` (Perfetto-loadable JSON
+        object) or ``jsonl`` (one event per line).  -> event count"""
+        if fmt == "chrome":
+            return self.tracer.to_chrome_trace(path)
+        if fmt == "jsonl":
+            return self.tracer.to_jsonl(path)
+        raise ValueError(f"unknown trace format {fmt!r}")
+
+    def export_audit(self, path: str, key_path: str | None = None) -> int:
+        """Write the audit log as JSONL (+ signed trailer); optionally also
+        write the derived verification key for offline auditors."""
+        n = self.audit.to_jsonl(path)
+        if key_path is not None:
+            self.audit.export_key(key_path)
+        return n
+
+    def verify_audit(self) -> dict:
+        return self.audit.verify_chain()

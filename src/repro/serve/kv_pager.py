@@ -61,6 +61,7 @@ import numpy as np
 
 from ..core import cipher, mac
 from ..core import sealed as sealed_guard
+from ..obs import MetricsRegistry, StatsView
 
 # data-plane lane separation: k pages, v pages and page MACs never share a
 # (key, nonce) space even though all three derive from one tenant session key.
@@ -303,6 +304,8 @@ class PagedKVPool:
     sealed: bool = True
     open_pages: bool = True     # slice-sealed tail pages (False = legacy
                                 # whole-page reseal per decode write)
+    metrics: MetricsRegistry | None = None  # shared registry (gateway's)
+    audit: object = None        # AuditLog sink for close/reopen/nonce events
 
     def __post_init__(self):
         shape = (self.n_pages, self.n_layers, self.page_size,
@@ -327,13 +330,60 @@ class PagedKVPool:
         self._free = deque(range(1, self.n_pages))
         self._owner: dict[int, str] = {}
         self._nonce_guard: dict[int, sealed_guard.NonceSpanGuard] = {}
-        self.stats = {"allocs": 0, "frees": 0, "peak_live": 0,
-                      "alloc_failures": 0,
-                      # §3.4 cost-model accounting (ciphertext bytes run
-                      # through seal, k+v, excluding tag sidecars)
-                      "sealed_bytes_prefill": 0, "sealed_bytes_decode": 0,
-                      "sealed_bytes_swap": 0, "decode_tokens": 0,
-                      "page_closes": 0, "page_reopens": 0}
+        if self.metrics is None:
+            self.metrics = MetricsRegistry()
+        reg = self.metrics
+        # allocator lifetime counters (survive measurement-window resets)
+        self._c_allocs = reg.counter(
+            "kv_pool_allocs_total", "pages handed out", windowed=False)
+        self._c_frees = reg.counter(
+            "kv_pool_frees_total", "pages returned", windowed=False)
+        self._c_alloc_failures = reg.counter(
+            "kv_pool_alloc_failures_total", "PoolExhausted raises",
+            windowed=False)
+        self._g_peak_live = reg.gauge(
+            "kv_pool_peak_live_pages", "high-water mark of live pages",
+            windowed=False)
+        # §3.4 cost-model accounting (ciphertext bytes run through seal,
+        # k+v, excluding tag sidecars) — windowed: reset per measurement
+        self._c_sealed = {
+            phase: reg.counter(f"kv_pool_sealed_bytes_{phase}_total",
+                               f"sealed bytes charged to {phase}")
+            for phase in ("prefill", "decode", "swap")}
+        self._c_decode_tokens = reg.counter(
+            "kv_pool_decode_tokens_total", "decode write-backs")
+        self._c_page_closes = reg.counter(
+            "kv_pool_page_closes_total", "OPEN -> CLOSED transitions")
+        self._c_page_reopens = reg.counter(
+            "kv_pool_page_reopens_total", "CLOSED -> OPEN transitions")
+        # historical dict read surface (pool.stats["allocs"], ...)
+        self.stats = StatsView(reg, {
+            "allocs": "kv_pool_allocs_total",
+            "frees": "kv_pool_frees_total",
+            "peak_live": "kv_pool_peak_live_pages",
+            "alloc_failures": "kv_pool_alloc_failures_total",
+            "sealed_bytes_prefill": "kv_pool_sealed_bytes_prefill_total",
+            "sealed_bytes_decode": "kv_pool_sealed_bytes_decode_total",
+            "sealed_bytes_swap": "kv_pool_sealed_bytes_swap_total",
+            "decode_tokens": "kv_pool_decode_tokens_total",
+            "page_closes": "kv_pool_page_closes_total",
+            "page_reopens": "kv_pool_page_reopens_total"})
+
+    def reset_window(self) -> None:
+        """Zero the windowed cost counters (sealing bytes, closes, tokens);
+        allocator lifetime stats and the peak gauge are untouched."""
+        for c in self._c_sealed.values():
+            c.reset()
+        self._c_decode_tokens.reset()
+        self._c_page_closes.reset()
+        self._c_page_reopens.reset()
+
+    def _audit(self, kind: str, page: int | None = None, **detail) -> None:
+        if self.audit is not None:
+            tenant = self._owner.get(page) if page is not None else None
+            if page is not None:
+                detail["page"] = page
+            self.audit.append(kind, tenant=tenant, **detail)
 
     # -- sizes -----------------------------------------------------------
     @property
@@ -370,7 +420,7 @@ class PagedKVPool:
         when the pool runs open-page sealing.
         """
         if n > len(self._free):
-            self.stats["alloc_failures"] += 1
+            self._c_alloc_failures.inc()
             raise PoolExhausted(f"need {n} pages, {len(self._free)} free")
         pages = [self._free.popleft() for _ in range(n)]
         idx = jnp.asarray(pages, jnp.int32)
@@ -386,8 +436,8 @@ class PagedKVPool:
             self._nonce_guard[p] = sealed_guard.NonceSpanGuard(
                 span=span if span else self.page_size + 2,
                 spent=spent[i] if spent else 0)
-        self.stats["allocs"] += n
-        self.stats["peak_live"] = max(self.stats["peak_live"], self.live_pages)
+        self._c_allocs.inc(n)
+        self._g_peak_live.set_max(self.live_pages)
         return pages
 
     def spend_nonce(self, page: int, n: int = 1) -> None:
@@ -395,6 +445,8 @@ class PagedKVPool:
         guard = self._nonce_guard.get(page)
         if guard is not None:
             guard.spend(n)
+            self._audit("nonce_spend", page=page, n=n, spent=guard.spent,
+                        span=guard.span)
 
     def nonce_spent(self, page: int) -> int:
         """Bumps consumed from ``page``'s reserved nonce span so far."""
@@ -419,7 +471,38 @@ class PagedKVPool:
             self._owner.pop(p, None)
             self._nonce_guard.pop(p, None)
             self._free.append(p)
-        self.stats["frees"] += len(pages)
+        self._c_frees.inc(len(pages))
+
+    # -- §3.4 cost accounting (the engine reports, the pool owns) --------
+    def note_prefill(self, pages_written: int) -> None:
+        """Charge a batched prefill chunk: whole pages sealed, k+v."""
+        if self.sealed:
+            self._c_sealed["prefill"].inc(2 * self.page_bytes * pages_written)
+
+    def note_decode(self, n_tokens: int) -> None:
+        """Charge one decode step's write-backs (slot or whole-page)."""
+        self._c_decode_tokens.inc(n_tokens)
+        if self.sealed:
+            per = 2 * (self.slot_bytes if self.open_pages
+                       else self.page_bytes)
+            self._c_sealed["decode"].inc(n_tokens * per)
+
+    def note_close(self, page: int, account: str, ok: bool) -> None:
+        """Record an OPEN -> CLOSED transition (audit + cost counters).
+
+        account: which sealed-bytes bucket the close charges to ("decode"
+        for fill-triggered closes, "swap" for swap-out closes)."""
+        self._c_page_closes.inc()
+        if self.sealed:
+            self._c_sealed[account].inc(2 * self.page_bytes)
+        self._audit("page_close", page=page, account=account, ok=bool(ok))
+
+    def note_reopen(self, page: int, ok: bool) -> None:
+        """Record a CLOSED -> OPEN transition (swap-in tail page)."""
+        self._c_page_reopens.inc()
+        if self.sealed:
+            self._c_sealed["swap"].inc(2 * self.page_bytes)
+        self._audit("page_reopen", page=page, ok=bool(ok))
 
     def owner_of(self, page: int) -> str | None:
         return self._owner.get(page)

@@ -40,6 +40,7 @@ from collections import deque
 
 import numpy as np
 
+from ..obs import StatsView, Tracer, request_tid
 from ..store import SealedStore, StoreError, choose_victim
 from .engine import TOKEN_POISON, PagedEngine
 from .kv_pager import SCRATCH_PAGE, PagedKVPool
@@ -97,7 +98,8 @@ class Request:
 class Scheduler:
     def __init__(self, engine: PagedEngine, pool: PagedKVPool,
                  sessions: SessionManager, max_slots: int, max_pages: int,
-                 store: SealedStore | None = None, provider=None):
+                 store: SealedStore | None = None, provider=None,
+                 tracer: Tracer | None = None, audit=None):
         self.engine = engine
         self.pool = pool
         self.sessions = sessions
@@ -110,10 +112,53 @@ class Scheduler:
         self.slots: list[Request | None] = [None] * max_slots
         self.requests: dict[int, Request] = {}
         self._next_rid = 1
-        self.swap_stats = {"swap_outs": 0, "swap_ins": 0,
-                           "swapped_bytes": 0}
-        self.prefill_stats = {"chunks": 0, "chunk_lanes": 0,
-                              "chunk_tokens": 0}
+        if tracer is None:
+            tracer = (engine.tracer if engine is not None
+                      else Tracer(enabled=False))
+        self.tracer = tracer
+        self.audit = audit          # obs.AuditLog (attached by the gateway)
+        # scheduler counters live in the pool's registry so the gateway
+        # snapshots one registry; dict-style views keep the historical
+        # ``swap_stats`` / ``prefill_stats`` read surface working
+        reg = self.metrics = pool.metrics
+        self._c_swaps = {
+            "swap_outs": reg.counter("sched_swap_outs_total",
+                                     "preemption swap-outs"),
+            "swap_ins": reg.counter("sched_swap_ins_total",
+                                    "preemption swap-ins"),
+            "swapped_bytes": reg.counter("sched_swapped_bytes_total",
+                                         "sealed bytes moved to the store"),
+        }
+        self._c_prefill = {
+            "chunks": reg.counter("sched_prefill_chunks_total",
+                                  "batched prefill-chunk steps"),
+            "chunk_lanes": reg.counter("sched_prefill_chunk_lanes_total",
+                                       "lanes advanced across chunk steps"),
+            "chunk_tokens": reg.counter("sched_prefill_chunk_tokens_total",
+                                        "prompt tokens prefilled"),
+        }
+        self.swap_stats = StatsView(reg, {
+            k: c.name for k, c in self._c_swaps.items()})
+        self.prefill_stats = StatsView(reg, {
+            k: c.name for k, c in self._c_prefill.items()})
+        self._h_ttft = reg.histogram("request_ttft_ms",
+                                     "submit -> first token, ms")
+        self._h_pre_ttft = reg.histogram(
+            "request_preempted_ttft_ms",
+            "submit -> first token for requests that were swapped out, ms")
+
+    def reset(self) -> None:
+        """Fresh measurement window for the scheduler's own metrics."""
+        for c in self._c_swaps.values():
+            c.reset()
+        for c in self._c_prefill.values():
+            c.reset()
+        self._h_ttft.reset()
+        self._h_pre_ttft.reset()
+
+    def _audit(self, kind: str, tenant: str | None, **detail) -> None:
+        if self.audit is not None:
+            self.audit.append(kind, tenant=tenant, **detail)
 
     # -- submission ------------------------------------------------------
     def required_pages(self, req: Request) -> int:
@@ -136,6 +181,14 @@ class Scheduler:
         self._next_rid += 1
         self.requests[req.rid] = req
         self.queue.append(req)
+        tid = request_tid(req.rid)
+        self.tracer.name_thread(tid, f"req {req.rid} ({tenant_id})")
+        self.tracer.instant("submit", cat="request", tid=tid,
+                            args={"rid": req.rid, "tenant": tenant_id,
+                                  "prompt_len": req.prompt_len,
+                                  "max_new": max_new,
+                                  "priority": priority})
+        self.tracer.begin(("req", req.rid), "queued", cat="request", tid=tid)
         return req.rid
 
     @property
@@ -158,9 +211,12 @@ class Scheduler:
     def step(self) -> dict:
         events = {"admitted": [], "emitted": [], "finished": [],
                   "poisoned": [], "preempted": [], "resumed": []}
-        self._admit(events)
-        self._prefill_step(events)
-        self._decode(events)
+        with self.tracer.span("sched.admit", cat="sched"):
+            self._admit(events)
+        with self.tracer.span("sched.prefill", cat="sched"):
+            self._prefill_step(events)
+        with self.tracer.span("sched.decode", cat="sched"):
+            self._decode(events)
         return events
 
     # -- admission + preemption -----------------------------------------
@@ -221,6 +277,9 @@ class Scheduler:
         req.prefill_pos = 0
         req.t_last = time.monotonic()
         self.slots[slot] = req
+        self.tracer.begin(("req", req.rid), "prefill", cat="request",
+                          tid=request_tid(req.rid),
+                          args={"pages": n_pages, "slot": slot})
 
     # -- chunked batched prefill ----------------------------------------
     def _prefill_step(self, events: dict) -> None:
@@ -269,10 +328,10 @@ class Scheduler:
             self.engine.chunk_prefill,
             {"op": "prefill_chunk_batch", "lanes": lane_desc},
             tokens, start, valid, active, page_tables)
-        self.prefill_stats["chunks"] += 1
-        self.prefill_stats["chunk_lanes"] += len(lanes)
-        self.prefill_stats["chunk_tokens"] += int(
-            sum(valid[r.slot] for r in lanes))
+        self._c_prefill["chunks"].inc()
+        self._c_prefill["chunk_lanes"].inc(len(lanes))
+        self._c_prefill["chunk_tokens"].inc(int(
+            sum(valid[r.slot] for r in lanes)))
         now = time.monotonic()
         for r in lanes:
             b = r.slot
@@ -283,6 +342,8 @@ class Scheduler:
             elif r.prefill_pos >= r.prompt_len:
                 r.status = "running"
                 r.t_first = now
+                self.tracer.begin(("req", r.rid), "decode", cat="request",
+                                  tid=request_tid(r.rid))
                 self._record_token(r, int(tok[b]), events)
 
     def _swap_out(self, victim: Request, events: dict) -> None:
@@ -310,6 +371,9 @@ class Scheduler:
                     return
         victim.resume_prefill = victim.status == "prefilling"
         pages = list(victim.pages)
+        self.tracer.instant("swap_out", cat="request",
+                            tid=request_tid(victim.rid),
+                            args={"rid": victim.rid, "pages": len(pages)})
         chunks, victim.swap_nonces = self.pool.export_pages(pages)
         # the nonce-span budget walks with the page across the swap: the
         # retained nonces keep their accumulated bumps, so the guard must
@@ -325,9 +389,12 @@ class Scheduler:
             meta={"rid": victim.rid, "n_pages": len(pages),
                   "seq_len": victim.seq_len,
                   "tokens_emitted": len(victim.tokens_out)})
-        self.swap_stats["swap_outs"] += 1
-        self.swap_stats["swapped_bytes"] += sum(c.nbytes
-                                                for c in chunks.values())
+        swapped_bytes = sum(c.nbytes for c in chunks.values())
+        self._c_swaps["swap_outs"].inc()
+        self._c_swaps["swapped_bytes"].inc(swapped_bytes)
+        self._audit("swap_out", victim.tenant_id, rid=victim.rid,
+                    n_pages=len(pages), bytes=swapped_bytes,
+                    freshness=victim.swaps_out, seq_len=victim.seq_len)
         self.slots[victim.slot] = None
         victim.slot = -1
         self.pool.free(victim.pages)
@@ -335,6 +402,8 @@ class Scheduler:
         victim.status = "swapped"
         self.queue.append(victim)
         events["preempted"].append(victim.rid)
+        self.tracer.begin(("req", victim.rid), "swapped", cat="request",
+                          tid=request_tid(victim.rid))
 
     def _swap_in(self, req: Request, slot: int, events: dict) -> None:
         """Bring a swapped request back: fresh physical pages, store bytes
@@ -361,11 +430,18 @@ class Scheduler:
                               chunks["k_tags"], chunks["v_tags"])
         self.store.delete(swap_object_id(req.rid))
         req.swaps_in += 1
-        self.swap_stats["swap_ins"] += 1
+        self._c_swaps["swap_ins"].inc()
+        self._audit("swap_in", req.tenant_id, rid=req.rid, n_pages=n_pages,
+                    freshness=req.swaps_out, seq_len=req.seq_len)
         req.slot = slot
         req.status = "prefilling" if req.resume_prefill else "running"
         req.t_last = time.monotonic()
         self.slots[slot] = req
+        self.tracer.begin(
+            ("req", req.rid),
+            "prefill" if req.resume_prefill else "decode",
+            cat="request", tid=request_tid(req.rid),
+            args={"resumed": True, "swaps_in": req.swaps_in})
         if self.engine.open_pages:
             # restore the open-page discipline: the partial tail page
             # reopens (verify close MAC, re-seal, fresh slice tags) and
@@ -469,3 +545,23 @@ class Scheduler:
         req.pages = []
         if self.store.exists(swap_object_id(req.rid)):
             self.store.delete(swap_object_id(req.rid))
+        # TTFT is scored at *finish* time so the preempted/clean split is
+        # final (a request can be preempted after its first token)
+        if req.t_first > 0:
+            ttft_ms = (req.t_first - req.t_submit) * 1e3
+            self._h_ttft.observe(ttft_ms)
+            if req.swaps_out > 0:
+                self._h_pre_ttft.observe(ttft_ms)
+        tid = request_tid(req.rid)
+        self.tracer.end(("req", req.rid),
+                        args={"tokens": len(req.tokens_out)})
+        if req.status == "poisoned":
+            self.tracer.instant("poison", cat="request", tid=tid,
+                                args={"rid": req.rid})
+            self._audit("tamper", req.tenant_id, rid=req.rid,
+                        tokens_emitted=len(req.tokens_out),
+                        swaps_out=req.swaps_out, swaps_in=req.swaps_in)
+        else:
+            self.tracer.instant("finish", cat="request", tid=tid,
+                                args={"rid": req.rid,
+                                      "tokens": len(req.tokens_out)})

@@ -63,10 +63,30 @@ class SessionManager:
         self.config = config or SecurityConfig()
         self.rotate_every = rotate_every
         self.store = store
+        self.device_id = device_id
         self._ca = trust.ManufacturerCA()
         self._accel = trust.TrustedAccelerator(device_id, self._ca)
         self._sessions: dict[str, TenantSession] = {}
         self._warm_seq = 0      # monotone freshness for warm-state puts
+        self.audit = None       # obs.AuditLog (attached by the gateway)
+
+    def attach_audit(self, audit) -> None:
+        """Attach the gateway's audit log; sessions registered *before* the
+        log existed (the provider — its key derives the audit key) get their
+        attest records emitted retroactively, in registration order."""
+        self.audit = audit
+        for sess in self._sessions.values():
+            self._audit_attest(sess)
+
+    def _audit_attest(self, sess: TenantSession) -> None:
+        if self.audit is None:
+            return
+        ch = sess.channel
+        ch.audit = self.audit
+        ch.audit_tenant = sess.tenant_id
+        self.audit.append("attest", tenant=sess.tenant_id,
+                          device=self.device_id, session_id=ch.session_id,
+                          epoch=ch.epoch, rotations=sess.rotations)
 
     # -- handshake -------------------------------------------------------
     def _handshake(self) -> tuple:
@@ -90,6 +110,7 @@ class SessionManager:
                              created_at=time.monotonic())
         self._restore_warm_state(sess)
         self._sessions[tenant_id] = sess
+        self._audit_attest(sess)
         return sess
 
     def get(self, tenant_id: str) -> TenantSession:
@@ -122,10 +143,15 @@ class SessionManager:
             rotations = int(warm.get("rotations", 0))
             reg_nonce = int(warm.get("reg_nonce", 0))
             # never re-walk the previous incarnation's nonce lanes
-            sess.channel.advance_epoch(int(warm.get("epoch", 0)) + 1)
+            floor = int(warm.get("epoch", 0)) + 1
+            sess.channel.advance_epoch(floor)
         except (StoreError, trust.SecurityError, KeyError, TypeError,
                 ValueError):
             return
+        if self.audit is not None:
+            self.audit.append("epoch_advance", tenant=sess.tenant_id,
+                              floor=floor, epoch=sess.channel.epoch,
+                              reg_nonce=reg_nonce)
         sess.launches = max(0, launches)
         sess.rotations = max(0, rotations)
         # Rule-3 warm restart: resume the register nonce lane at the last
@@ -176,4 +202,8 @@ class SessionManager:
         sess.launches = 0
         sess.rotations += 1
         self._persist_warm_state(sess)
+        if self.audit is not None:
+            self.audit.append("rotate", tenant=tenant_id,
+                              rotations=sess.rotations,
+                              epoch=sess.channel.epoch)
         return sess.channel

@@ -111,8 +111,13 @@ class SealedStore:
         self.stats = {"puts": 0, "gets": 0, "deletes": 0, "evictions": 0,
                       "bytes_in": 0, "bytes_out": 0, "verify_failures": 0,
                       "freshness_rejects": 0}
+        self.audit = None       # obs.AuditLog (attached by the gateway)
         if root:
             os.makedirs(root, exist_ok=True)
+
+    def _audit(self, kind: str, tenant: str | None, **detail) -> None:
+        if self.audit is not None:
+            self.audit.append(kind, tenant=tenant, **detail)
 
     # -- paths -----------------------------------------------------------
     def _obj_dir(self, object_id: str) -> str:
@@ -136,6 +141,9 @@ class SealedStore:
         prev = self.manifest(object_id)
         if prev is not None and freshness < prev["freshness"]:
             self.stats["freshness_rejects"] += 1
+            self._audit("store_freshness_reject", tenant_id,
+                        object_id=object_id, freshness=int(freshness),
+                        stored=int(prev["freshness"]))
             raise StoreError(
                 f"object {object_id!r}: freshness {freshness} < stored "
                 f"{prev['freshness']} (stale write refused)")
@@ -231,6 +239,9 @@ class SealedStore:
                 h = _sha256(arr.tobytes())
                 if h != e["sha256"]:
                     self.stats["verify_failures"] += 1
+                    self._audit("store_verify_fail", manifest["tenant_id"],
+                                object_id=object_id, chunk=e["name"],
+                                what="chunk_hash")
                     raise StoreError(
                         f"object {object_id!r} chunk {e['name']!r} hash "
                         "mismatch (tampered or rotted)")
@@ -240,12 +251,16 @@ class SealedStore:
         if verify:
             if _merkle_root(hashes) != manifest["merkle_root"]:
                 self.stats["verify_failures"] += 1
+                self._audit("store_verify_fail", manifest["tenant_id"],
+                            object_id=object_id, what="merkle_root")
                 raise StoreError(f"object {object_id!r} merkle root mismatch")
             if key_bytes is not None:
                 core = {k: v for k, v in manifest.items() if k != "hmac"}
                 want = _sign(core, key_bytes)
                 if not hmac_lib.compare_digest(want, manifest["hmac"]):
                     self.stats["verify_failures"] += 1
+                    self._audit("store_verify_fail", manifest["tenant_id"],
+                                object_id=object_id, what="manifest_hmac")
                     raise StoreError(
                         f"object {object_id!r} manifest HMAC mismatch")
         if self.root is None:
@@ -323,4 +338,7 @@ class SealedStore:
             kb = keys_by_tenant.get(m["tenant_id"]) if m.get("hmac") else None
             (report["ok"] if self.verify_object(oid, kb)
              else report["corrupt"]).append(oid)
+        self._audit("store_fsck", None, ok=len(report["ok"]),
+                    corrupt=len(report["corrupt"]),
+                    corrupt_ids=report["corrupt"])
         return report

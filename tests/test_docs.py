@@ -12,12 +12,16 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 def test_docs_exist_and_are_linked_from_readme():
     for rel in ("docs/ARCHITECTURE.md", "docs/SERVING.md",
-                "benchmarks/README.md", "README.md"):
+                "docs/OBSERVABILITY.md", "benchmarks/README.md",
+                "README.md"):
         assert (ROOT / rel).is_file(), f"{rel} missing"
     readme = (ROOT / "README.md").read_text()
     assert "docs/ARCHITECTURE.md" in readme
     assert "docs/SERVING.md" in readme
+    assert "docs/OBSERVABILITY.md" in readme
     assert "benchmarks/README.md" in readme
+    # the observability book is cross-linked from the architecture book
+    assert "OBSERVABILITY.md" in (ROOT / "docs" / "ARCHITECTURE.md").read_text()
 
 
 def test_doc_references_resolve():

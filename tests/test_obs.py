@@ -1,0 +1,317 @@
+"""Unit tests for the observability layer (repro.obs) — pure host-side.
+
+Covers the tracer (span model + Chrome trace_event export), the metrics
+registry (nearest-rank percentiles, windowed reset, Prometheus text) and
+the hash-chained audit log (tamper/truncation detection, offline JSONL
+verification), plus the two CLI tools that ride on them.  No engine, no
+jit — these run in milliseconds.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro.obs import (AuditLog, Counter, Gauge, Histogram, MetricError,
+                       MetricsRegistry, StatsView, Tracer, TID_ENGINE,
+                       chrome_trace, derive_audit_key, jsonl_to_chrome,
+                       request_tid, verify_jsonl, verify_records)
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+KEY = b"\x07" * 32
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+def test_tracer_complete_and_instant_events():
+    tr = Tracer()
+    tr.name_process("gw")
+    tr.name_thread(TID_ENGINE, "engine")
+    with tr.span("step", cat="serve", args={"n": 1}):
+        pass
+    tr.instant("submit", tid=request_tid(0), args={"rid": 0})
+    ev = tr.drain()
+    # metadata first, then the span and the instant
+    assert [e["ph"] for e in ev] == ["M", "M", "X", "i"]
+    x = ev[2]
+    assert x["name"] == "step" and x["cat"] == "serve"
+    assert x["dur"] >= 0 and x["args"] == {"n": 1}
+    assert ev[3]["tid"] == request_tid(0)
+    assert tr.drain() == ev                  # drain() leaves the buffer intact
+    tr.reset()
+    assert tr.drain()[2:] == []              # reset clears events, keeps names
+
+
+def test_tracer_begin_end_spans_cross_calls():
+    tr = Tracer()
+    tr.begin(("req", 7), "queued", tid=request_tid(7))
+    tr.begin(("req", 7), "decode", tid=request_tid(7))   # closes "queued"
+    tr.end(("req", 7), args={"tokens": 3})
+    names = [(e["name"], e["ph"]) for e in tr.drain() if e["ph"] == "X"]
+    assert names == [("queued", "X"), ("decode", "X")]
+    tr.end(("req", 7))                       # ending a dead key is a no-op
+
+
+def test_tracer_disabled_records_nothing():
+    tr = Tracer(enabled=False)
+    tr.instant("x")
+    tr.begin("k", "s")
+    tr.end("k")
+    with tr.span("y"):
+        pass
+    assert tr.drain() == []
+
+
+def test_chrome_trace_export_roundtrip(tmp_path):
+    tr = Tracer()
+    with tr.span("a"):
+        pass
+    jl, ch = tmp_path / "t.jsonl", tmp_path / "t.json"
+    n = tr.to_jsonl(jl)
+    tr.to_chrome_trace(ch)
+    obj = json.loads(ch.read_text())
+    assert obj["displayTimeUnit"] == "ms"
+    assert len(obj["traceEvents"]) == n >= 1
+    with open(jl) as f:
+        assert jsonl_to_chrome(f) == obj
+    assert chrome_trace([])["traceEvents"] == []
+
+
+# ---------------------------------------------------------------------------
+# metrics: nearest-rank percentile (the pct() bias fix)
+# ---------------------------------------------------------------------------
+
+def test_percentile_single_observation_is_that_observation():
+    h = Histogram("h", "")
+    h.observe(42.0)
+    assert h.percentile(0.50) == 42.0 == h.percentile(0.99)
+
+
+def test_percentile_nearest_rank_small_window():
+    h = Histogram("h", "")
+    for v in (1, 2, 3, 4):
+        h.observe(v)
+    # nearest-rank: ceil(0.5*4) = rank 2 -> 2.  The old int(p*n) indexing
+    # returned sorted[2] == 3, biasing small windows high.
+    assert h.percentile(0.50) == 2
+    assert h.percentile(1.00) == 4
+    assert h.percentile(0.25) == 1
+    assert h.percentile(0.75) == 3
+
+
+def test_percentile_hundred_samples():
+    h = Histogram("h", "")
+    for v in range(100, 0, -1):              # unsorted insert order
+        h.observe(float(v))
+    assert h.percentile(0.50) == 50.0
+    assert h.percentile(0.95) == 95.0
+    assert h.percentile(0.99) == 99.0
+    assert h.percentile(0.0) == 1.0          # clamped to rank 1
+    assert h.count == 100 and h.mean == pytest.approx(50.5)
+
+
+def test_percentile_empty_histogram_is_zero():
+    assert Histogram("h", "").percentile(0.5) == 0.0
+    assert Histogram("h", "").mean == 0.0
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_registry_get_or_create_and_type_conflict():
+    reg = MetricsRegistry()
+    c = reg.counter("x_total", "help")
+    assert reg.counter("x_total", "help") is c
+    with pytest.raises(MetricError):
+        reg.gauge("x_total", "help")
+
+
+def test_registry_labels_make_distinct_series():
+    reg = MetricsRegistry()
+    a = reg.counter("tokens_total", "", tenant="alice")
+    b = reg.counter("tokens_total", "", tenant="bob")
+    assert a is not b
+    a.inc(3)
+    b.inc(5)
+    fam = reg.family("tokens_total")
+    assert {dict(k)["tenant"]: m.value for k, m in fam.items()} == \
+        {"alice": 3, "bob": 5}
+
+
+def test_registry_reset_is_windowed_only():
+    reg = MetricsRegistry()
+    win = reg.counter("w_total", "")
+    life = reg.counter("l_total", "", windowed=False)
+    g = reg.gauge("g_peak", "", windowed=False)
+    h = reg.histogram("h_ms", "")
+    win.inc(2)
+    life.inc(2)
+    g.set_max(9)
+    h.observe(1.0)
+    reg.reset()
+    assert win.value == 0 and h.count == 0
+    assert life.value == 2 and g.value == 9      # lifetime survives
+
+
+def test_stats_view_is_a_live_dict_facade():
+    reg = MetricsRegistry()
+    reg.counter("kv_allocs_total", "", windowed=False)
+    view = StatsView(reg, {"allocs": "kv_allocs_total"})
+    assert view["allocs"] == 0
+    view["allocs"] += 9                          # legacy write path
+    assert reg.counter("kv_allocs_total", "", windowed=False).value == 9
+    assert dict(view) == {"allocs": 9} and len(view) == 1
+
+
+def test_prometheus_text_exposition():
+    reg = MetricsRegistry()
+    reg.counter("steps_total", "engine steps").inc(4)
+    reg.counter("tokens_total", "", tenant="a b").inc(1)
+    h = reg.histogram("lat_ms", "latency")
+    for v in (1.0, 2.0, 3.0):
+        h.observe(v)
+    text = reg.to_prometheus()
+    assert "# TYPE steps_total counter" in text
+    assert "steps_total 4" in text
+    assert 'tokens_total{tenant="a b"} 1' in text
+    assert "lat_ms_count 3" in text and "lat_ms_sum 6" in text
+    assert 'lat_ms{quantile="0.5"} 2' in text
+
+
+def test_counter_and_gauge_basics():
+    c = Counter("c", "")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(MetricError):
+        c.inc(-1)
+    g = Gauge("g", "")
+    g.set(5)
+    g.set_max(3)
+    assert g.value == 5
+    g.set_max(8)
+    assert g.value == 8
+
+
+# ---------------------------------------------------------------------------
+# audit log: hash chain + tamper evidence
+# ---------------------------------------------------------------------------
+
+def _log(n=6):
+    clock = iter(range(1000, 2000))
+    log = AuditLog(KEY, clock=lambda: float(next(clock)))
+    for i in range(n):
+        log.append("launch", tenant=f"t{i % 2}", op="decode", nonce=i)
+    return log
+
+
+def test_chain_verifies_and_detects_edit():
+    log = _log()
+    assert log.verify_chain()["ok"] and len(log) == 6
+    log.records[3]["detail"]["nonce"] = 99            # tamper one field
+    rep = log.verify_chain()
+    assert not rep["ok"] and rep["first_bad"] == 3
+
+
+def test_chain_detects_reorder_and_truncation():
+    log = _log()
+    log.records[1], log.records[2] = log.records[2], log.records[1]
+    assert log.verify_chain()["first_bad"] == 1
+    log = _log()
+    log.records.pop()                                 # tail truncation
+    rep = log.verify_chain()
+    assert not rep["ok"] and rep["first_bad"] is None  # head mismatch
+
+
+def test_jsonl_export_offline_verification(tmp_path):
+    log = _log()
+    path = tmp_path / "audit.jsonl"
+    assert log.to_jsonl(path) == 6
+    audit_key = derive_audit_key(KEY)
+    assert verify_jsonl(path, audit_key)["ok"]
+
+    lines = path.read_text().splitlines()
+    assert json.loads(lines[-1])["kind"] == "_trailer"
+
+    # tail truncation: drop the last record but keep the trailer
+    (tmp_path / "trunc.jsonl").write_text("\n".join(lines[:-2] +
+                                                    [lines[-1]]) + "\n")
+    assert not verify_jsonl(tmp_path / "trunc.jsonl", audit_key)["ok"]
+    # stripped trailer
+    (tmp_path / "strip.jsonl").write_text("\n".join(lines[:-1]) + "\n")
+    assert not verify_jsonl(tmp_path / "strip.jsonl", audit_key)["ok"]
+    # forged trailer count
+    tr = json.loads(lines[-1])
+    tr["count"] = 5
+    (tmp_path / "forge.jsonl").write_text(
+        "\n".join(lines[:-2] + [json.dumps(tr)]) + "\n")
+    assert not verify_jsonl(tmp_path / "forge.jsonl", audit_key)["ok"]
+    # wrong key
+    assert not verify_jsonl(path, b"\x08" * 32)["ok"]
+
+
+def test_verify_records_standalone():
+    log = _log(3)
+    audit_key = derive_audit_key(KEY)
+    rep = verify_records(log.records, audit_key,
+                         expect_head=log.head, expect_count=3)
+    assert rep["ok"] and rep["records"] == 3
+    assert not verify_records(log.records, audit_key,
+                              expect_head="00" * 32, expect_count=3)["ok"]
+
+
+def test_audit_kinds_and_records_of():
+    log = AuditLog(KEY)
+    log.append("attest", tenant="a", device="d0")
+    log.append("launch", tenant="a", op="prefill")
+    log.append("launch", tenant="b", op="decode")
+    assert log.kinds() == {"attest": 1, "launch": 2}
+    assert [r["tenant"] for r in log.records_of("launch")] == ["a", "b"]
+
+
+# ---------------------------------------------------------------------------
+# CLI tools (satellite f): trace2perfetto + verify_audit
+# ---------------------------------------------------------------------------
+
+def _run_tool(name, *args):
+    return subprocess.run(
+        [sys.executable, str(ROOT / "tools" / name), *map(str, args)],
+        capture_output=True, text=True)
+
+
+def test_trace2perfetto_cli(tmp_path):
+    tr = Tracer()
+    with tr.span("a"):
+        pass
+    tr.instant("b")
+    src = tmp_path / "trace.jsonl"
+    n = tr.to_jsonl(src)
+    dst = tmp_path / "trace.json"
+    proc = _run_tool("trace2perfetto.py", src, dst)
+    assert proc.returncode == 0, proc.stderr
+    obj = json.loads(dst.read_text())
+    assert len(obj["traceEvents"]) == n
+    assert _run_tool("trace2perfetto.py").returncode == 2   # usage
+
+
+def test_verify_audit_cli(tmp_path):
+    log = _log()
+    jl, key = tmp_path / "a.jsonl", tmp_path / "a.key"
+    log.to_jsonl(jl)
+    log.export_key(key)
+    assert _run_tool("verify_audit.py", jl, key).returncode == 0
+    # flip one byte of one record -> non-zero exit
+    lines = jl.read_text().splitlines()
+    rec = json.loads(lines[2])
+    rec["detail"]["nonce"] = 1234
+    lines[2] = json.dumps(rec)
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text("\n".join(lines) + "\n")
+    proc = _run_tool("verify_audit.py", bad, key)
+    assert proc.returncode == 1 and "FAILED" in proc.stdout

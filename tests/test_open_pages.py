@@ -314,9 +314,17 @@ def test_warm_restart_restores_register_nonce_floor():
     assert sess1.channel.device_regs.last_nonce == 5
     mgr1.note_launch("tenant-a", n=64)      # crosses the persist threshold
     # ---- restart: fresh manager over the same (untrusted) store --------
+    from repro.obs import AuditLog
     mgr2 = SessionManager(store=store)
+    audit = AuditLog(b"\x05" * 32)
+    mgr2.attach_audit(audit)
     sess2 = mgr2.register("tenant-a")
     assert sess2.channel.device_regs.last_nonce >= 5
+    # the warm restore left a chained epoch_advance record for the auditor
+    adv = audit.records_of("epoch_advance")
+    assert adv and adv[0]["tenant"] == "tenant-a"
+    assert adv[0]["detail"]["reg_nonce"] >= 5
+    assert audit.verify_chain()["ok"]
     assert sess2.channel.host_regs.nonce >= 5
     # a replayed pre-restart launch stream (nonces 1..5) is stale now
     with pytest.raises(ReplayError):

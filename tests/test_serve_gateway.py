@@ -40,7 +40,8 @@ def setup():
 def gateway(setup):
     cfg, params, _ = setup
     return SecureGateway(cfg, params, security="trusted", max_slots=3,
-                         page_size=PAGE, n_pages=32, max_pages_per_seq=MAXP)
+                         page_size=PAGE, n_pages=32, max_pages_per_seq=MAXP,
+                         trace=True)
 
 
 @pytest.fixture(scope="module")
@@ -372,3 +373,146 @@ def test_nonce_epoch_rolls_on_counter_wrap():
     assert (b >> 24) == (a >> 24)            # same session lane
     with pytest.raises(SecurityError):
         ch.fresh_nonce(span=1 << 17)         # span larger than an epoch
+
+
+# ---------------------------------------------------------------------------
+# observability: traces, windowed metrics reset, audit trail
+# (these run LAST — they reset the shared gateway's measurement window)
+# ---------------------------------------------------------------------------
+
+def test_trace_covers_request_lifecycle(setup, gateway, tmp_path):
+    """The shared gateway ran with trace=True: its buffer must hold engine
+    phase spans, per-request lifecycle spans on virtual request threads,
+    and submit/finish instants — and export as a loadable Chrome trace."""
+    import json
+    from repro.obs import TID_ENGINE, TID_REQ_BASE
+    ev = gateway.tracer.drain()
+    names = {e["name"] for e in ev}
+    assert {"serve_step", "engine.decode_step", "sched.decode"} <= names
+    assert {"submit", "finish", "poison", "swap_out"} <= \
+        {e["name"] for e in ev if e["ph"] == "i"}
+    spans = [e for e in ev if e["ph"] == "X"]
+    req_spans = {e["name"] for e in spans if e["tid"] >= TID_REQ_BASE}
+    assert {"queued", "prefill", "decode"} <= req_spans
+    assert any(e["name"] == "swapped" for e in spans)     # preemption visible
+    assert all(e["dur"] >= 0 for e in spans)
+    assert any(e["tid"] == TID_ENGINE for e in spans)
+    path = tmp_path / "trace.json"
+    n = gateway.export_trace(path, fmt="chrome")
+    obj = json.loads(path.read_text())
+    assert len(obj["traceEvents"]) == n and obj["displayTimeUnit"] == "ms"
+
+
+def test_audit_chain_covers_security_events(setup, gateway):
+    """Everything security-relevant that happened above left a chained
+    record — and the chain still verifies end-to-end."""
+    kinds = gateway.audit.kinds()
+    for k in ("attest", "launch", "rotate", "nonce_spend",
+              "page_close", "swap_out", "swap_in", "tamper"):
+        assert kinds.get(k, 0) >= 1, f"missing audit kind {k!r}"
+    assert gateway.verify_audit()["ok"]
+    # tamper records carry the owning tenant: the page bit-flip poisoned
+    # alice, and each swap-object attack poisoned its preemption victim
+    recs = gateway.audit.records_of("tamper")
+    assert len(recs) >= 3
+    assert "alice" in {r["tenant"] for r in recs}
+
+
+def test_reset_metrics_zeroes_every_windowed_key(setup, gateway):
+    """Satellite (c): after reset_metrics(), every exported windowed key
+    reads zero — no matter which object owns the underlying metric — while
+    lifetime allocator/session facts survive."""
+    lifetime = {"elapsed_s", "kv_pages_peak", "kv_pages_free",
+                "rotations", "launches_verified"}
+    before = gateway.metrics()
+    assert before["tokens"] > 0 and before["swap_outs"] > 0
+    assert gateway.pool.stats["allocs"] > 0
+    allocs = gateway.pool.stats["allocs"]
+    gateway.reset_metrics()
+    m = gateway.metrics()
+    for key, val in m.items():
+        if key in lifetime:
+            continue
+        if key == "tokens_per_tenant":
+            # label series persist across resets; their counts zero
+            assert all(v == 0 for v in val.values()), val
+        else:
+            assert val == 0, f"windowed key {key!r} = {val!r} after reset"
+    # lifetime facts are NOT windowed: they survive the reset
+    assert m["kv_pages_peak"] > 0
+    assert m["launches_verified"] > 0
+    assert gateway.pool.stats["allocs"] == allocs
+    assert gateway.pool.stats["peak_live"] > 0
+
+
+def test_sealing_cost_accounting_under_preemption(setup, gateway, reference):
+    """Satellite (d): force a swap-out/in cycle in a fresh measurement
+    window and check the §3.4 sealing-cost ledger is self-consistent."""
+    cfg, params, prompts = setup
+    gateway.reset_metrics()
+    audit_before = len(gateway.audit)
+    swap_outs0 = gateway.audit.kinds().get("swap_out", 0)
+    rids, victim = _fill_slots_then_preempt(gateway, prompts)
+    gateway.drain()
+    for t, rid in rids.items():
+        assert gateway.status(rid) == "done"
+        ref = reference["alice"] if t == "dave" else reference[t]
+        np.testing.assert_array_equal(gateway.collect(rid), ref)
+    m = gateway.metrics()
+    page_bytes = gateway.pool.page_bytes
+    slot_bytes = gateway.pool.slot_bytes
+    assert m["swap_outs"] >= 1 and m["swap_ins"] >= m["swap_outs"]
+    # each seal pass reads+writes a whole page: the swap bucket is a
+    # multiple of 2*page_bytes and covers at least every reopen (a swap
+    # with a page-aligned tail legitimately closes/reopens nothing)
+    assert m["sealed_bytes_swap"] % (2 * page_bytes) == 0
+    assert m["sealed_bytes_swap"] >= 2 * page_bytes * m["page_reopens"]
+    assert m["page_closes"] >= m["page_reopens"]
+    if m["page_reopens"]:
+        assert m["sealed_bytes_swap"] >= 2 * page_bytes
+    # decode bucket: each request's first token comes from prefill, the
+    # rest from decode steps (one lane-step per token)
+    assert 4 * (N_NEW - 1) <= m["decode_tokens"] <= 4 * N_NEW
+    assert m["sealed_bytes_per_token"] == \
+        m["sealed_bytes_decode"] / m["decode_tokens"]
+    assert m["sealed_bytes_per_token"] >= 2 * slot_bytes
+    assert m["sealed_bytes_prefill"] > 0
+    # raw swapped ciphertext moves at least one page per swap-out
+    assert m["swapped_bytes"] >= m["swap_outs"] * page_bytes
+    # the window's swaps are mirrored in the (lifetime) audit log
+    assert gateway.audit.kinds()["swap_out"] - swap_outs0 == m["swap_outs"]
+    new = gateway.audit.records[audit_before:]
+    out = next(r for r in new if r["kind"] == "swap_out")
+    assert out["tenant"] == gateway.scheduler.requests[victim].tenant_id
+    assert out["detail"]["bytes"] > 0 and out["detail"]["n_pages"] >= 1
+    assert gateway.verify_audit()["ok"]
+
+
+def test_tampered_request_emits_tamper_audit_record(setup, gateway,
+                                                    reference):
+    """Satellite (d): a poisoned request leaves a chained 'tamper' record
+    naming its tenant, while the other tenant finishes clean."""
+    cfg, params, prompts = setup
+    tamper_before = gateway.audit.kinds().get("tamper", 0)
+    rid_a = gateway.submit("alice", prompts["alice"], max_new=N_NEW)
+    rid_b = gateway.submit("bob", prompts["bob"], max_new=N_NEW)
+    gateway.step()
+    page = gateway.scheduler.requests[rid_a].pages[0]
+    gateway.pool.k_ct = gateway.pool.k_ct.at[page, 0, 0, 0, 0].add(1)
+    gateway.drain()
+    assert gateway.status(rid_a) == "poisoned"
+    assert gateway.status(rid_b) == "done"
+    np.testing.assert_array_equal(gateway.collect(rid_b), reference["bob"])
+    recs = gateway.audit.records_of("tamper")[tamper_before:]
+    assert len(recs) == 1 and recs[0]["tenant"] == "alice"
+    assert recs[0]["detail"]["rid"] == rid_a
+    assert gateway.verify_audit()["ok"]      # tamper record is chained too
+
+
+def test_prometheus_exposition_matches_window(setup, gateway):
+    text = gateway.metrics_text()
+    assert "# TYPE gateway_steps_total counter" in text
+    assert "kv_pool_peak_live_pages" in text
+    assert "request_ttft_ms_count" in text
+    m = gateway.metrics()
+    assert f"sched_swap_outs_total {m['swap_outs']}" in text

@@ -1,0 +1,45 @@
+#!/usr/bin/env python
+"""Offline verifier for an exported hash-chained audit log.
+
+Checks a ``gateway.export_audit`` JSONL file — per-record HMAC chain,
+signed trailer, head and count — with the *derived* verification key
+(``BENCH_audit.key``; it grants audit verification without revealing the
+provider session key):
+
+    python tools/verify_audit.py BENCH_audit.jsonl BENCH_audit.key
+
+Exit status 0 iff the chain verifies; any edit, reorder, insertion,
+deletion or truncation of the log makes this non-zero — the CI smoke job
+runs it against the benchmark's audit artifact.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.obs import verify_jsonl  # noqa: E402
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) != 2:
+        print(__doc__.strip())
+        return 2
+    log_path, key_path = argv
+    with open(key_path) as f:
+        audit_key = bytes.fromhex(f.read().strip())
+    report = verify_jsonl(log_path, audit_key)
+    if report["ok"]:
+        print(f"{log_path}: OK — {report['records']} records, "
+              "chain + trailer verify")
+        return 0
+    where = (f" at record {report['first_bad']}"
+             if report["first_bad"] is not None else "")
+    print(f"{log_path}: FAILED{where} — {report['reason']}")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
