@@ -38,6 +38,12 @@ Artifacts (written to the working directory, see docs/OBSERVABILITY.md):
     BENCH_audit.jsonl          that cell's hash-chained audit log + trailer
     BENCH_audit.key            the derived verification key (hex) for
                                tools/verify_audit.py
+    BENCH_metrics.prom         that cell's Prometheus exposition — feed it
+                               to tools/obs_dash.py with the audit JSONL
+
+The committed repo-root BENCH_serve_gateway.json / BENCH_micro.json are the
+CI perf baselines: the bench-gate job re-runs ``run.py --smoke`` and diffs
+the fresh artifacts against them with tools/bench_diff.py.
 """
 from __future__ import annotations
 
@@ -156,15 +162,22 @@ def _export_obs(gw, result: dict, out_dir: str) -> dict:
     trace_path = f"{out_dir}/BENCH_trace.json"
     audit_path = f"{out_dir}/BENCH_audit.jsonl"
     key_path = f"{out_dir}/BENCH_audit.key"
+    prom_path = f"{out_dir}/BENCH_metrics.prom"
     n_events = gw.export_trace(trace_path, fmt="chrome")
     n_records = gw.export_audit(audit_path, key_path=key_path)
+    with open(prom_path, "w") as f:
+        f.write(gw.metrics_text())
     report = gw.verify_audit()
     if not report["ok"]:
         raise RuntimeError(f"audit chain failed verification: {report}")
     result["artifacts"].update(
-        {"trace": trace_path, "audit": audit_path, "audit_key": key_path})
-    return {"records": n_records, "trace_events": n_events,
-            "kinds": gw.audit.kinds(), "verify": report}
+        {"trace": trace_path, "audit": audit_path, "audit_key": key_path,
+         "metrics_prom": prom_path})
+    summary = {"records": n_records, "trace_events": n_events,
+               "kinds": gw.audit.kinds(), "verify": report}
+    if gw.monitor is not None:
+        summary["alerts"] = [a.to_dict() for a in gw.monitor.alerts]
+    return summary
 
 
 def run_burst(cfg, params, tenants: int = 3, requests: int = 6,

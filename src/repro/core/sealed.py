@@ -146,6 +146,11 @@ class ResealCounter:
     def exhausted(self) -> bool:
         return self.count >= self.limit
 
+    def headroom(self) -> dict:
+        """Monitor-facing budget report (obs/monitor.py headroom source)."""
+        return {"source": "reseal_lanes", "limit": self.limit,
+                "count": self.count, "remaining": self.remaining}
+
     def note(self, n: int = 1) -> None:
         if self.count + n > self.limit:
             raise NonceLaneExhausted(
@@ -175,6 +180,11 @@ class NonceSpanGuard:
     @property
     def remaining(self) -> int:
         return max(0, self.span - 1 - self.spent)
+
+    def headroom(self) -> dict:
+        """Monitor-facing budget report (obs/monitor.py headroom source)."""
+        return {"source": "page_nonce", "span": self.span,
+                "spent": self.spent, "remaining": self.remaining}
 
     def spend(self, n: int = 1) -> None:
         if self.spent + n > self.span - 1:

@@ -9,10 +9,15 @@ every Nth request as high priority (class 5): when slots or pages run out it
 preempts running low-priority requests, whose sealed KV swaps verbatim into
 the SealedStore host tier and back.  ``--engine fixed`` keeps the legacy
 equal-length fixed-slot path for comparison.
+
+``--watch N`` prints the live posture dashboard (SLOs, alerts, per-tenant
+state — obs/dash.py) to stderr every N steps; ``--slo name=value`` tunes
+the streaming Monitor's thresholds, e.g. ``--slo ttft_p95_ms=250``.
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -21,17 +26,22 @@ import numpy as np
 from .. import configs
 from ..core.channel import SecureChannel
 from ..models import registry
+from ..obs import MonitorConfig, parse_slo_overrides, render_gateway
 from ..serve import SecureGateway, ServeEngine
 
 
 def _run_gateway(cfg, params, args) -> None:
+    mon_cfg = MonitorConfig()
+    if args.slo:
+        mon_cfg = mon_cfg.overridden(**parse_slo_overrides(args.slo))
     gw = SecureGateway(cfg, params, security=args.security,
                        max_slots=args.slots, page_size=args.page_size,
                        n_pages=args.pages, max_pages_per_seq=args.max_pages,
                        rotate_every=args.rotate_every,
                        open_pages=not args.whole_page_reseal,
                        prefill_chunk=args.prefill_chunk,
-                       trace=bool(args.trace))
+                       trace=bool(args.trace),
+                       monitor_config=mon_cfg)
     rng = np.random.RandomState(0)
     rids = []
     for i in range(args.requests):
@@ -41,7 +51,18 @@ def _run_gateway(cfg, params, args) -> None:
         prio = 5 if (args.hi_every and (i + 1) % args.hi_every == 0) else 0
         rids.append(gw.submit(tenant, prompt, max_new=args.max_new,
                               priority=prio))
-    gw.drain()
+    if args.watch:
+        # periodic posture snapshot to stderr while draining (the same
+        # renderer tools/obs_dash.py runs offline)
+        steps = 0
+        while not gw.scheduler.idle:
+            gw.step()
+            steps += 1
+            if steps % args.watch == 0:
+                print(render_gateway(gw), file=sys.stderr)
+        print(render_gateway(gw), file=sys.stderr)
+    else:
+        gw.drain()
     for rid in rids:
         out = gw.collect(rid)
         req = gw.scheduler.requests[rid]
@@ -134,6 +155,14 @@ def main() -> None:
     ap.add_argument("--audit", default="",
                     help="export the hash-chained audit log (JSONL + "
                          "<path>.key verification key) here")
+    ap.add_argument("--watch", type=int, default=0, metavar="N",
+                    help="print the posture dashboard (SLOs, alerts, "
+                         "per-tenant state) to stderr every N steps")
+    ap.add_argument("--slo", action="append", default=[],
+                    metavar="NAME=VALUE",
+                    help="monitor threshold override, e.g. "
+                         "--slo ttft_p95_ms=250 (repeatable; see "
+                         "repro.obs.MonitorConfig for field names)")
     ap.add_argument("--security", default="trusted", choices=("trusted", "off"))
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full", dest="smoke", action="store_false")

@@ -12,10 +12,21 @@ and the trust substrate:
     (attestations, rotations, launch verifications, page closes/reopens,
     swaps, tamper poisonings) where truncation and in-place edits are
     detectable by ``verify_chain()``.
+
+On top of the three sits the streaming ``Monitor`` (monitor.py + rules.py):
+declarative SLO / storm / headroom rules evaluated once per gateway step,
+emitting typed ``Alert``s and driving scheduler actions (quarantine,
+proactive spill, nonce-lane refresh) over an action bus; ``dash`` renders
+the whole posture as a terminal snapshot, live or from exported files.
 """
 from .audit import (AuditError, AuditLog, derive_audit_key,  # noqa: F401
                     verify_jsonl, verify_records)
+from .dash import parse_prometheus, render, render_gateway  # noqa: F401
 from .metrics import (Counter, Gauge, Histogram, MetricError,  # noqa: F401
-                      MetricsRegistry, StatsView)
+                      MetricsRegistry, StatsView, escape_label_value)
+from .monitor import Monitor, Sample  # noqa: F401
+from .rules import (Alert, ChainRule, HeadroomRule,  # noqa: F401
+                    MonitorConfig, SloRule, StormRule, default_rules,
+                    parse_slo_overrides)
 from .trace import (Tracer, chrome_trace, jsonl_to_chrome,  # noqa: F401
                     request_tid, TID_ENGINE, TID_REQ_BASE)

@@ -8,8 +8,12 @@ stack.  Emitters and their record kinds:
 
     sessions.py          attest, rotate, epoch_advance
     core/channel.py      launch, launch_reject
-    serve/scheduler.py   swap_out, swap_in, tamper
-    serve/kv_pager.py    page_close, page_reopen, nonce_spend
+    serve/scheduler.py   swap_out, swap_in, tamper, quarantine,
+                         quarantine_reject, quarantine_release,
+                         proactive_spill
+    serve/kv_pager.py    page_close, page_reopen, nonce_spend,
+                         nonce_refresh, page_renonce
+    obs/monitor.py       alert
     store/sealed_store.py  store_verify_fail, store_freshness_reject,
                            store_fsck
 
@@ -194,7 +198,17 @@ def verify_jsonl(path: str, audit_key: bytes) -> dict:
             line = line.strip()
             if not line:
                 continue
-            rec = json.loads(line)
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                rec = None
+            if not isinstance(rec, dict):
+                # a scribbled-over line is an edited record: report it as
+                # the first bad index instead of blowing up the verifier
+                return {"ok": False, "records": len(records),
+                        "first_bad": len(records),
+                        "reason": "unparseable record line (edited or "
+                                  "corrupted export)"}
             if rec.get("kind") == "_trailer":
                 trailer = rec
             else:

@@ -35,6 +35,22 @@ class MetricError(ValueError):
     pass
 
 
+def escape_label_value(v) -> str:
+    """Prometheus exposition escaping for label values: backslash, double
+    quote and newline must be escaped or the sample line is unparseable."""
+    return (str(v).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
+def _escape_help(text: str) -> str:
+    """HELP text escaping per the exposition format (backslash, newline)."""
+    return text.replace("\\", "\\\\").replace("\n", "\\n")
+
+
+def _label_string(pairs) -> str:
+    return ",".join(f'{k}="{escape_label_value(v)}"' for k, v in pairs)
+
+
 class _Metric:
     kind = "untyped"
 
@@ -48,8 +64,7 @@ class _Metric:
     def label_suffix(self) -> str:
         if not self.labels:
             return ""
-        inner = ",".join(f'{k}="{v}"' for k, v in self.labels)
-        return "{" + inner + "}"
+        return "{" + _label_string(self.labels) + "}"
 
     def reset(self) -> None:            # pragma: no cover - overridden
         raise NotImplementedError
@@ -210,16 +225,19 @@ class MetricsRegistry:
         for name in sorted(by_name):
             group = by_name[name]
             kind = group[0].kind
-            if group[0].help:
-                lines.append(f"# HELP {name} {group[0].help}")
+            # HELP/TYPE are per *family*: emitted once even when many label
+            # sets exist, taking the first non-empty help text registered
+            # (children created via labels=... often omit it)
+            help_text = next((m.help for m in group if m.help), "")
+            if help_text:
+                lines.append(f"# HELP {name} {_escape_help(help_text)}")
             lines.append(f"# TYPE {name} "
                          f"{'summary' if kind == 'histogram' else kind}")
             for m in group:
                 if isinstance(m, Histogram):
                     for q in self.QUANTILES:
                         ql = list(m.labels) + [("quantile", q)]
-                        inner = ",".join(f'{k}="{v}"' for k, v in ql)
-                        lines.append(f"{name}{{{inner}}} "
+                        lines.append(f"{name}{{{_label_string(ql)}}} "
                                      f"{m.percentile(q)}")
                     lines.append(f"{name}_sum{m.label_suffix()} {m.sum}")
                     lines.append(f"{name}_count{m.label_suffix()} {m.count}")

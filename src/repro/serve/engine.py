@@ -166,6 +166,7 @@ class PagedEngine:
         self._chunk_prefill = jax.jit(self._chunk_prefill_impl)
         self._close = jax.jit(self._close_impl)
         self._reopen = jax.jit(self._reopen_impl)
+        self._renonce = jax.jit(self._renonce_impl)
 
     @property
     def open_pages(self) -> bool:
@@ -463,6 +464,66 @@ class PagedEngine:
             self.pool.update_arrays(arrays)
         self.pool.note_reopen(page, bool(ok))
         return bool(ok)
+
+    def _renonce_impl(self, pool_arrays, page, fresh):
+        (k_ct, v_ct, k_tags, v_tags, k_stags, v_stags, nonces, keys,
+         open_flags, fill) = pool_arrays
+        k, v, ok = kv_pager.unseal_page(
+            k_ct[page], v_ct[page], k_tags[page], v_tags[page],
+            keys[page], nonces[page], self.cfg.act_dtype,
+            self.pool.chunk_words)
+        kct2, vct2, ktags2, vtags2 = kv_pager.seal_page(
+            k, v, keys[page], fresh, self.pool.chunk_words)
+        # fail closed: a page that did not verify under its old nonce must
+        # not come back verifiable under the fresh one
+        poison = jnp.where(ok, jnp.uint32(0), jnp.uint32(0xA5A5A5A5))
+        k_ct = k_ct.at[page].set(kct2)
+        v_ct = v_ct.at[page].set(vct2)
+        k_tags = k_tags.at[page].set(ktags2 ^ poison)
+        v_tags = v_tags.at[page].set(vtags2 ^ poison)
+        nonces = nonces.at[page].set(jnp.asarray(fresh, jnp.uint32))
+        return ok, (k_ct, v_ct, k_tags, v_tags, k_stags, v_stags, nonces,
+                    keys, open_flags, fill)
+
+    def renonce_page(self, page: int, fresh_nonce: int, span: int) -> bool:
+        """Re-seal ``page`` under a freshly reserved channel nonce lane.
+
+        The nonce-headroom alert path (ROADMAP item 5): a tail page about
+        to exhaust its reserved nonce span is closed (the last old-lane
+        bump), whole-page re-sealed under the fresh lane's base nonce, its
+        guard restarted at the new span, and reopened (the first new-lane
+        bump).  The plaintext never changes, so the token stream is
+        bitwise-identical to a run that never renonced.
+        """
+        was_open = bool(np.asarray(self.pool.open_flags)[page])
+        fill_n = int(np.asarray(self.pool.fill)[page])
+        if not self.pool.sealed:
+            self.pool.renonce_guard(page, span)
+            self.pool.note_renonce(page, True)
+            return True
+        if was_open and fill_n == 0:
+            # nothing written under the old lane yet — point the page at
+            # the fresh lane directly, no crypto to carry over
+            self.pool.nonces = self.pool.nonces.at[page].set(
+                jnp.asarray(fresh_nonce, jnp.uint32))
+            self.pool.renonce_guard(page, span)
+            self.pool.note_renonce(page, True)
+            return True
+        ok = True
+        if was_open:
+            ok = self.close_page(page, account="decode")
+        with self.tracer.span("engine.renonce_page", cat="engine",
+                              args={"page": int(page)}):
+            ok2, arrays = self._renonce(self.pool.arrays(),
+                                        jnp.asarray(page, jnp.int32),
+                                        jnp.asarray(fresh_nonce, jnp.uint32))
+            self.pool.update_arrays(arrays)
+        ok = ok and bool(ok2)
+        self.pool.renonce_guard(page, span)
+        self.pool.note_renonce(page, ok)
+        if was_open:
+            ok = self.reopen_page(page, fill_n) and ok
+        return ok
 
     # -- decode ----------------------------------------------------------
     def _decode_impl(self, params_in, tokens, seq_lens, active, page_tables,

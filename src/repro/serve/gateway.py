@@ -34,7 +34,9 @@ import time
 import numpy as np
 
 from ..core.policy import SecurityConfig
-from ..obs import AuditLog, MetricsRegistry, Tracer, TID_ENGINE
+from ..obs import (AuditLog, MetricsRegistry, Monitor, MonitorConfig,
+                   Tracer, TID_ENGINE)
+from ..obs import rules as obs_rules
 from ..store import SealedStore
 from .engine import PagedEngine
 from .kv_pager import PagedKVPool
@@ -50,7 +52,9 @@ class SecureGateway:
                  max_pages_per_seq: int = 4, rotate_every: int = 0,
                  chunk_words: int = 128, device_id: str = "tpu-0",
                  store: SealedStore | None = None, open_pages: bool = True,
-                 prefill_chunk: int = 0, trace: bool = False):
+                 prefill_chunk: int = 0, trace: bool = False,
+                 monitor: bool = True,
+                 monitor_config: MonitorConfig | None = None):
         """open_pages: slice-seal the tail page of each sequence (per-token
         seal cost O(bytes written), paper §3.4) instead of re-sealing the
         whole page every decode step.  False keeps the legacy whole-page
@@ -62,7 +66,13 @@ class SecureGateway:
 
         trace: record request-lifecycle and engine-phase trace events
         (export with ``export_trace``); off by default — a disabled tracer
-        short-circuits every emit."""
+        short-circuits every emit.
+
+        monitor: evaluate the streaming SLO/posture Monitor at the end of
+        every step and let it drive scheduler actions (tamper-storm
+        quarantine, occupancy spill, nonce-lane refresh) over its action
+        bus.  monitor_config tunes the thresholds (obs/rules.py); latency
+        SLO bounds default off, security/headroom rules default on."""
         self.cfg = cfg
         sec = (SecurityConfig() if security == "trusted"
                else SecurityConfig.off())
@@ -104,6 +114,19 @@ class SecureGateway:
             "token_latency_ms", "per-token step latency, ms")
         self._h_occ = self.registry.histogram(
             "pool_occupancy_ratio", "live/usable pages, sampled per step")
+        # the monitor's clock: a plain monotone python counter, NOT the
+        # windowed steps counter above — reset_metrics() zeroes that one,
+        # which would run the monitor's cooldowns and storm windows
+        # backwards mid-flight
+        self._nsteps = 0
+        self.monitor = None
+        if monitor:
+            self.monitor = Monitor(config=monitor_config,
+                                   registry=self.registry, audit=self.audit)
+            self.monitor.on(obs_rules.ACT_QUARANTINE,
+                            self._on_alert_quarantine)
+            self.monitor.on(obs_rules.ACT_SPILL, self._on_alert_spill)
+            self.monitor.on(obs_rules.ACT_RENONCE, self._on_alert_renonce)
 
     def reset_metrics(self) -> None:
         """Start a fresh measurement window (e.g. after a warm-up pass).
@@ -155,7 +178,74 @@ class SecureGateway:
             req = self.scheduler.requests[rid]
             self.registry.counter("tokens_total", "tokens emitted",
                                   tenant=req.tenant_id).inc()
+        self._nsteps += 1
+        if self.monitor is not None:
+            self._monitor_observe()
         return events
+
+    # -- monitor sample + action handlers --------------------------------
+    def _monitor_observe(self) -> None:
+        """Feed the monitor this step's SLO values, observation counts and
+        trusted-side headroom reports, then let fired alerts act."""
+        lat = self._h_token_lat
+        ttft = self.scheduler._h_ttft
+        elapsed = time.monotonic() - self._t_start
+        usable = max(1, self.pool.n_pages - 1)
+        slo = {
+            "ttft_p95_ms": ttft.percentile(0.95) if ttft.count else None,
+            "token_p95_ms": lat.percentile(0.95) if lat.count else None,
+            "tok_per_s": (lat.count / elapsed) if elapsed > 0 else None,
+            "occupancy_pct": 100.0 * self.pool.live_pages / usable,
+        }
+        counts = {
+            "ttft_p95_ms": ttft.count,
+            "token_p95_ms": lat.count,
+            "tok_per_s": lat.count,
+            "occupancy_pct": self._nsteps,
+        }
+        headroom = self.pool.headroom()
+        cap = self.store.capacity_bytes
+        if cap:
+            free_pct = 100.0 * max(0, cap - self.store.nbytes) / cap
+            headroom.append({"source": "store_capacity", "id": "store",
+                             "remaining": free_pct,
+                             "capacity_bytes": cap})
+        self.monitor.observe(self._nsteps, slo=slo, counts=counts,
+                             headroom=headroom)
+
+    def _on_alert_quarantine(self, alert) -> None:
+        tenant = alert.tenant
+        if not tenant or tenant == PROVIDER:
+            return
+        if self.sessions.is_quarantined(tenant):
+            return
+        self.scheduler.quarantine_tenant(tenant, reason=alert.rule)
+
+    def _on_alert_spill(self, alert) -> None:
+        self.scheduler.proactive_spill()
+
+    def _on_alert_renonce(self, alert) -> None:
+        page = alert.detail.get("id")
+        if page is not None:
+            self.scheduler.refresh_page_lane(int(page))
+
+    # -- quarantine (operator surface) ------------------------------------
+    def quarantine(self, tenant_id: str, reason: str = "manual") -> list:
+        """Drain + bar a tenant; returns the drained rids (audit-logged)."""
+        if tenant_id == PROVIDER:
+            raise ValueError("cannot quarantine the provider session")
+        return self.scheduler.quarantine_tenant(tenant_id, reason=reason)
+
+    def release_quarantine(self, tenant_id: str) -> bool:
+        return self.scheduler.release_tenant(tenant_id)
+
+    def quarantined(self) -> list:
+        return self.sessions.quarantined
+
+    def dashboard(self, tail: int = 8) -> str:
+        """Terminal posture snapshot (obs/dash.py)."""
+        from ..obs import dash
+        return dash.render_gateway(self, tail=tail)
 
     def collect(self, rid: int, max_steps: int = 100_000) -> np.ndarray:
         """Step until ``rid`` finishes; return its tokens (int32 array).

@@ -356,6 +356,9 @@ class PagedKVPool:
             "kv_pool_page_closes_total", "OPEN -> CLOSED transitions")
         self._c_page_reopens = reg.counter(
             "kv_pool_page_reopens_total", "CLOSED -> OPEN transitions")
+        self._c_page_renonces = reg.counter(
+            "kv_pool_page_renonces_total",
+            "pages re-sealed under a fresh nonce lane")
         # historical dict read surface (pool.stats["allocs"], ...)
         self.stats = StatsView(reg, {
             "allocs": "kv_pool_allocs_total",
@@ -506,6 +509,41 @@ class PagedKVPool:
 
     def owner_of(self, page: int) -> str | None:
         return self._owner.get(page)
+
+    # -- trusted-side headroom (obs/monitor.py source) -------------------
+    def headroom(self) -> list[dict]:
+        """Per-page nonce-span budget reports for every live page.
+
+        Each entry is the page guard's ``NonceSpanGuard.headroom()`` plus
+        identity: {"source": "page_nonce", "id", "tenant", "open",
+        "remaining", "span", "spent"}.  ``open`` routes the monitor's
+        attention — only OPEN tail pages spend further bumps.
+        """
+        open_np = np.asarray(self.open_flags)
+        out = []
+        for page, guard in self._nonce_guard.items():
+            owner = self._owner.get(page)
+            if owner is None:
+                continue
+            h = guard.headroom()
+            h.update(id=page, tenant=owner, open=bool(open_np[page]))
+            out.append(h)
+        return out
+
+    def renonce_guard(self, page: int, span: int) -> None:
+        """Reset ``page``'s nonce budget after a re-seal under a freshly
+        reserved channel nonce lane (engine.renonce_page) — the old lane is
+        abandoned, the new reservation starts unspent."""
+        self._nonce_guard[page] = sealed_guard.NonceSpanGuard(span=span)
+        self._audit("nonce_refresh", page=page, span=span)
+
+    def note_renonce(self, page: int, ok: bool) -> None:
+        """Record a nonce-lane re-seal (cost: one unseal + whole-page seal,
+        charged to the decode bucket like the close it pre-empts)."""
+        self._c_page_renonces.inc()
+        if self.sealed:
+            self._c_sealed["decode"].inc(2 * self.page_bytes)
+        self._audit("page_renonce", page=page, ok=bool(ok))
 
     def pages_of(self, owner: str) -> list[int]:
         return [p for p, o in self._owner.items() if o == owner]

@@ -49,6 +49,10 @@ from .sessions import SessionManager
 SWAP_KIND = "kv_swap"
 
 
+class TenantQuarantined(RuntimeError):
+    """Admission refused: the tenant is quarantined (monitor action)."""
+
+
 def swap_object_id(rid: int) -> str:
     return f"kvswap/{rid}"
 
@@ -61,7 +65,7 @@ class Request:
     max_new: int
     priority: int = 0               # higher preempts lower
     status: str = "queued"          # queued | prefilling | running | swapped
-                                    # | done | poisoned
+                                    # | done | poisoned | quarantined
     tokens_out: list = dataclasses.field(default_factory=list)
     slot: int = -1
     pages: list = dataclasses.field(default_factory=list)
@@ -92,7 +96,7 @@ class Request:
 
     @property
     def finished(self) -> bool:
-        return self.status in ("done", "poisoned")
+        return self.status in ("done", "poisoned", "quarantined")
 
 
 class Scheduler:
@@ -167,6 +171,12 @@ class Scheduler:
 
     def submit(self, tenant_id: str, prompt: np.ndarray, max_new: int,
                priority: int = 0) -> int:
+        if self.sessions.is_quarantined(tenant_id):
+            self._audit("quarantine_reject", tenant_id,
+                        reason=self.sessions.quarantine_reason(tenant_id))
+            raise TenantQuarantined(
+                f"tenant {tenant_id!r} is quarantined "
+                f"({self.sessions.quarantine_reason(tenant_id)})")
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         now = time.monotonic()
         req = Request(rid=self._next_rid, tenant_id=tenant_id, prompt=prompt,
@@ -206,6 +216,77 @@ class Scheduler:
             return False
         return not any(r.status == "swapped" and r.tenant_id == tenant_id
                        for r in self.requests.values())
+
+    # -- monitor actions -------------------------------------------------
+    def quarantine_tenant(self, tenant_id: str, reason: str = "") -> list:
+        """Drain a tenant and refuse further admission (monitor action).
+
+        Every in-flight request of the tenant — queued, prefilling,
+        running, swapped — terminates with status ``quarantined``; its
+        slot and pages return to the pool and its swap objects are
+        destroyed.  Other tenants' lanes are untouched, so their token
+        streams are bitwise-identical to a run without the quarantine.
+        Returns the drained rids; the decision is audit-logged.
+        """
+        self.sessions.quarantine(tenant_id, reason)
+        dropped = []
+        victims = [r for r in self.requests.values()
+                   if r.tenant_id == tenant_id and not r.finished]
+        for req in victims:
+            if req in self.queue:
+                self.queue.remove(req)
+            req.status = "quarantined"
+            self._evict(req)
+            dropped.append(req.rid)
+        self._audit("quarantine", tenant_id, reason=reason,
+                    dropped=sorted(dropped))
+        return sorted(dropped)
+
+    def release_tenant(self, tenant_id: str) -> bool:
+        """Lift a quarantine (operator action); audit-logged."""
+        released = self.sessions.release(tenant_id)
+        if released:
+            self._audit("quarantine_release", tenant_id)
+        return released
+
+    def proactive_spill(self) -> int | None:
+        """Swap out the least-valuable running request ahead of pool
+        exhaustion (occupancy-watermark monitor action).  Reuses the
+        preemption path verbatim — sealed pages move ciphertext-only into
+        the store and the request rejoins the queue — but bypasses the
+        priority feasibility gate: the point is freeing pages now, not
+        admitting a specific waiter.  Returns the spilled rid (None when
+        fewer than two requests are active — spilling the sole tenant of
+        the pool frees nothing anyone is waiting for).
+        """
+        candidates = [r for r in self.active
+                      if r.status in ("prefilling", "running")]
+        if len(candidates) < 2:
+            return None
+        victim = min(candidates,
+                     key=lambda r: (r.priority, r.t_last, r.rid))
+        n_pages = len(victim.pages)
+        events = {k: [] for k in ("admitted", "emitted", "finished",
+                                  "poisoned", "preempted", "resumed")}
+        self._swap_out(victim, events)
+        if victim.rid in events["poisoned"]:
+            return None
+        self._audit("proactive_spill", victim.tenant_id, rid=victim.rid,
+                    n_pages=n_pages)
+        return victim.rid
+
+    def refresh_page_lane(self, page: int) -> bool:
+        """Re-seal ``page`` under a freshly reserved channel nonce lane
+        (nonce-headroom monitor action) — the page's budget restarts
+        instead of the guard failing closed mid-decode.  ROADMAP item 5.
+        """
+        owner = self.pool.owner_of(page)
+        if owner is None:
+            return False
+        ch = self.sessions.channel(owner)
+        span = self.pool.page_size + 2
+        fresh = ch.fresh_nonce(span=span)
+        return self.engine.renonce_page(page, fresh, span)
 
     # -- one scheduling step --------------------------------------------
     def step(self) -> dict:
@@ -546,8 +627,9 @@ class Scheduler:
         if self.store.exists(swap_object_id(req.rid)):
             self.store.delete(swap_object_id(req.rid))
         # TTFT is scored at *finish* time so the preempted/clean split is
-        # final (a request can be preempted after its first token)
-        if req.t_first > 0:
+        # final (a request can be preempted after its first token);
+        # quarantine-drained requests never score (they were cut short)
+        if req.t_first > 0 and req.status != "quarantined":
             ttft_ms = (req.t_first - req.t_submit) * 1e3
             self._h_ttft.observe(ttft_ms)
             if req.swaps_out > 0:
@@ -561,6 +643,9 @@ class Scheduler:
             self._audit("tamper", req.tenant_id, rid=req.rid,
                         tokens_emitted=len(req.tokens_out),
                         swaps_out=req.swaps_out, swaps_in=req.swaps_in)
+        elif req.status == "quarantined":
+            self.tracer.instant("quarantine_drop", cat="request", tid=tid,
+                                args={"rid": req.rid})
         else:
             self.tracer.instant("finish", cat="request", tid=tid,
                                 args={"rid": req.rid,

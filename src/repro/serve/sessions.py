@@ -68,6 +68,7 @@ class SessionManager:
         self._accel = trust.TrustedAccelerator(device_id, self._ca)
         self._sessions: dict[str, TenantSession] = {}
         self._warm_seq = 0      # monotone freshness for warm-state puts
+        self._quarantined: dict[str, str] = {}   # tenant -> reason
         self.audit = None       # obs.AuditLog (attached by the gateway)
 
     def attach_audit(self, audit) -> None:
@@ -125,6 +126,27 @@ class SessionManager:
     @property
     def tenants(self) -> list[str]:
         return list(self._sessions)
+
+    # -- quarantine ------------------------------------------------------
+    def quarantine(self, tenant_id: str, reason: str = "") -> None:
+        """Flag a tenant: existing session state stays (the channel still
+        decrypts its own evidence), but admission is refused until
+        ``release``.  Idempotent; the scheduler drains in-flight work."""
+        self._quarantined[tenant_id] = reason
+
+    def release(self, tenant_id: str) -> bool:
+        """Lift a quarantine; returns whether one was in force."""
+        return self._quarantined.pop(tenant_id, None) is not None
+
+    def is_quarantined(self, tenant_id: str) -> bool:
+        return tenant_id in self._quarantined
+
+    def quarantine_reason(self, tenant_id: str) -> str | None:
+        return self._quarantined.get(tenant_id)
+
+    @property
+    def quarantined(self) -> list[str]:
+        return sorted(self._quarantined)
 
     # -- warm state (store-backed) ---------------------------------------
     def _restore_warm_state(self, sess: TenantSession) -> None:

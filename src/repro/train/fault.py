@@ -71,6 +71,9 @@ class Supervisor:
     # rather than reuse keystream across leaves.
     lane_guard: Optional[ResealCounter] = None
     refresh_fn: Optional[Callable] = None       # state -> re-sealed state
+    # optional obs.Monitor: fed the lane guard's headroom each step, so the
+    # "reseal_lanes" HeadroomRule warns *before* the budget forces a refresh
+    monitor: Optional[object] = None
 
     def run(self, state, n_steps: int, start_step: int = 0, log=None):
         log = log or (lambda *a: None)
@@ -101,6 +104,10 @@ class Supervisor:
                     log(f"step {step}: straggler ({dt:.3f}s) — flagged for "
                         "reassignment")
                 step += 1
+                if self.monitor is not None and self.lane_guard is not None:
+                    self.monitor.observe(
+                        step, headroom=[self.lane_guard.headroom()
+                                        | {"id": "train_lanes"}])
                 if step % self.save_every == 0 or step == n_steps:
                     checkpoint.save(self.ckpt_dir, step, state, self.key_bytes)
                     events["saves"] += 1

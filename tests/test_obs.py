@@ -9,16 +9,24 @@ jit — these run in milliseconds.
 from __future__ import annotations
 
 import json
+import math
 import pathlib
 import subprocess
 import sys
 
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    from _hypothesis_stub import given, settings, st
+
 from repro.obs import (AuditLog, Counter, Gauge, Histogram, MetricError,
                        MetricsRegistry, StatsView, Tracer, TID_ENGINE,
-                       chrome_trace, derive_audit_key, jsonl_to_chrome,
-                       request_tid, verify_jsonl, verify_records)
+                       chrome_trace, derive_audit_key, escape_label_value,
+                       jsonl_to_chrome, parse_prometheus, request_tid,
+                       verify_jsonl, verify_records)
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 KEY = b"\x07" * 32
@@ -120,6 +128,28 @@ def test_percentile_empty_histogram_is_zero():
     assert Histogram("h", "").mean == 0.0
 
 
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(min_value=1, max_value=300),
+       seed=st.integers(min_value=0, max_value=50))
+def test_percentile_matches_numpy_nearest_rank(n, seed):
+    """Property: Histogram.percentile is numpy's inverted-CDF (nearest-rank)
+    quantile for every window size, including n=1 and all-equal windows."""
+    import numpy as np
+    rng = np.random.RandomState(seed)
+    vals = rng.uniform(-1e3, 1e3, n) if seed % 3 else \
+        np.full(n, float(seed))                  # all-equal every third seed
+    h = Histogram("h", "")
+    for v in vals:
+        h.observe(float(v))
+    for p in (0.0, 0.01, 0.25, 0.50, 0.75, 0.95, 0.99, 1.0):
+        want_rank = max(1, min(n, math.ceil(p * n)))
+        want = float(np.sort(vals)[want_rank - 1])
+        assert h.percentile(p) == want
+        if 0.0 < p <= 1.0:                       # numpy cross-check
+            assert h.percentile(p) == pytest.approx(float(np.percentile(
+                vals, 100.0 * p, method="inverted_cdf")))
+
+
 # ---------------------------------------------------------------------------
 # metrics registry
 # ---------------------------------------------------------------------------
@@ -182,6 +212,38 @@ def test_prometheus_text_exposition():
     assert 'tokens_total{tenant="a b"} 1' in text
     assert "lat_ms_count 3" in text and "lat_ms_sum 6" in text
     assert 'lat_ms{quantile="0.5"} 2' in text
+
+
+def test_prometheus_label_escaping_round_trip():
+    """Label values with backslashes, quotes and newlines survive the
+    exposition format — parse_prometheus inverts to_prometheus exactly."""
+    assert escape_label_value('pa\\th "q"\nend') == 'pa\\\\th \\"q\\"\\nend'
+    reg = MetricsRegistry()
+    nasty = {"back\\slash": 1.0, 'quo"te': 2.0, "new\nline": 3.0,
+             'all\\"of\nit\\': 4.0}
+    for tenant, v in nasty.items():
+        reg.counter("tokens_total", "", tenant=tenant).inc(v)
+    families = parse_prometheus(reg.to_prometheus())
+    assert {lbl["tenant"]: v for lbl, v in families["tokens_total"]} == nasty
+
+
+def test_prometheus_help_and_type_once_per_family():
+    reg = MetricsRegistry()
+    reg.counter("tokens_total", "", tenant="a").inc(1)    # empty help first
+    reg.counter("tokens_total", "tokens emitted", tenant="b").inc(2)
+    reg.counter("tokens_total", "other help", tenant="c").inc(3)
+    h = reg.histogram("lat_ms", "latency")
+    h.observe(1.0)
+    text = reg.to_prometheus()
+    # one HELP + one TYPE line per family, even with three label sets;
+    # the first *non-empty* help wins
+    assert text.count("# TYPE tokens_total counter") == 1
+    assert text.count("# HELP tokens_total") == 1
+    assert "# HELP tokens_total tokens emitted" in text
+    assert text.count("# TYPE lat_ms summary") == 1
+    # samples for every label set are still all present
+    fams = parse_prometheus(text)
+    assert len(fams["tokens_total"]) == 3
 
 
 def test_counter_and_gauge_basics():
@@ -315,3 +377,56 @@ def test_verify_audit_cli(tmp_path):
     bad.write_text("\n".join(lines) + "\n")
     proc = _run_tool("verify_audit.py", bad, key)
     assert proc.returncode == 1 and "FAILED" in proc.stdout
+
+
+def test_verify_audit_cli_exit_code_contract(tmp_path):
+    """0 = verifies, 1 = chain break, 2 = trailer-level, 3 = can't try."""
+    log = _log()
+    jl, key = tmp_path / "a.jsonl", tmp_path / "a.key"
+    log.to_jsonl(jl)
+    log.export_key(key)
+    lines = jl.read_text().splitlines()
+
+    # 1: an edited record line that no longer even parses
+    scribbled = tmp_path / "scribble.jsonl"
+    scribbled.write_text("\n".join(lines[:3] + ["{oops"] + lines[4:]) + "\n")
+    assert _run_tool("verify_audit.py", scribbled, key).returncode == 1
+
+    # 2: trailer stripped / forged count (truncation-style failures)
+    stripped = tmp_path / "stripped.jsonl"
+    stripped.write_text("\n".join(lines[:-1]) + "\n")
+    proc = _run_tool("verify_audit.py", stripped, key)
+    assert proc.returncode == 2 and "trailer" in proc.stdout
+    tr = json.loads(lines[-1])
+    tr["count"] = 3
+    forged = tmp_path / "forged.jsonl"
+    forged.write_text("\n".join(lines[:-1] + [json.dumps(tr)]) + "\n")
+    assert _run_tool("verify_audit.py", forged, key).returncode == 2
+
+    # 3: unreadable log / malformed or empty key — never a traceback
+    proc = _run_tool("verify_audit.py", tmp_path / "missing.jsonl", key)
+    assert proc.returncode == 3 and "Traceback" not in proc.stderr
+    badkey = tmp_path / "bad.key"
+    badkey.write_text("not-hex")
+    assert _run_tool("verify_audit.py", jl, badkey).returncode == 3
+    badkey.write_text("")
+    assert _run_tool("verify_audit.py", jl, badkey).returncode == 3
+
+    # --quiet: exit code is the whole answer
+    proc = _run_tool("verify_audit.py", "-q", stripped, key)
+    assert proc.returncode == 2 and proc.stdout == ""
+
+
+def test_verify_audit_cli_empty_log(tmp_path):
+    """A trailer-only export (zero records) verifies; an empty file is a
+    trailer-level failure — both without a traceback."""
+    log = AuditLog(KEY)
+    jl, key = tmp_path / "empty.jsonl", tmp_path / "empty.key"
+    assert log.to_jsonl(jl) == 0
+    log.export_key(key)
+    proc = _run_tool("verify_audit.py", jl, key)
+    assert proc.returncode == 0 and "0 records" in proc.stdout
+    bare = tmp_path / "bare.jsonl"
+    bare.write_text("")
+    proc = _run_tool("verify_audit.py", bare, key)
+    assert proc.returncode == 2 and "Traceback" not in proc.stderr

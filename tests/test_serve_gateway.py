@@ -14,6 +14,7 @@ import pytest
 from repro import configs
 from repro.core.channel import SecureChannel
 from repro.models import registry
+from repro.obs import MonitorConfig
 from repro.serve import (PagedKVPool, PoolExhausted, SecureGateway,
                          ServeEngine, SessionManager, TOKEN_POISON,
                          swap_object_id)
@@ -39,9 +40,14 @@ def setup():
 @pytest.fixture(scope="module")
 def gateway(setup):
     cfg, params, _ = setup
+    # tamper_storm_count=0 disables the monitor's auto-quarantine: this
+    # module *deliberately* injects tampering against the same tenants over
+    # and over, which is exactly the storm the rule exists to catch (the
+    # quarantine path has its own tests in test_monitor.py)
     return SecureGateway(cfg, params, security="trusted", max_slots=3,
                          page_size=PAGE, n_pages=32, max_pages_per_seq=MAXP,
-                         trace=True)
+                         trace=True,
+                         monitor_config=MonitorConfig(tamper_storm_count=0))
 
 
 @pytest.fixture(scope="module")

@@ -1,0 +1,172 @@
+#!/usr/bin/env python
+"""Compare two benchmark artifacts with per-metric tolerance bands.
+
+The CI perf-regression gate:
+
+    python tools/bench_diff.py BASELINE.json CURRENT.json \\
+        --default-tol 0.10 --tol sealed_bytes_per_token=0.05 \\
+        --report diff.json
+
+Both files must be the same artifact kind, autodetected from their
+``benchmark`` field:
+
+    serve_gateway   rows keyed by (mode, scenario) from the ``grid`` list
+                    and (write_back, prefill_chunk) from ``burst``;
+                    compared metrics: tok_per_s, p50_token_ms,
+                    p95_token_ms, mean_ttft_ms, sealed_bytes_per_token
+    micro           rows keyed by ``name``; compared metric: us_per_call
+
+Comparison is *relative* and direction-aware: a lower-is-better metric
+regresses when ``current > baseline * (1 + tol)``; a higher-is-better one
+(tok_per_s) when ``current < baseline * (1 - tol)``.  ``--tol name=band``
+overrides the band per metric (0.10 = 10%).  Zero baselines are skipped
+(no meaningful relative band); a row present in the baseline but missing
+from the current artifact is a regression.
+
+Output: a human table to stdout (improvements, inside-band drift and
+regressions all shown) and, with ``--report``, a JSON document of every
+comparison.  Exit status: 0 inside all bands, 1 any regression or missing
+row, 2 unusable input (I/O, parse, kind mismatch).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+SERVE_METRICS = ("tok_per_s", "p50_token_ms", "p95_token_ms",
+                 "mean_ttft_ms", "sealed_bytes_per_token")
+BURST_METRICS = ("mean_ttft_ms", "sealed_bytes_per_token")
+HIGHER_BETTER = {"tok_per_s"}
+
+
+def rows_of(data: dict) -> dict:
+    """Flatten an artifact into {row key: {metric: value}}."""
+    kind = data.get("benchmark")
+    rows: dict = {}
+    if kind == "serve_gateway":
+        for cell in data.get("grid", []):
+            key = f"{cell['mode']}/{cell['scenario']}"
+            m = cell.get("metrics", {})
+            rows[key] = {k: m[k] for k in SERVE_METRICS if k in m}
+        for cell in data.get("burst", []):
+            chunk = cell.get("prefill_chunk", 0)
+            key = f"burst/{cell['write_back']}/chunk={chunk or 'max'}"
+            m = cell.get("metrics", {})
+            rows[key] = {k: m[k] for k in BURST_METRICS if k in m}
+    elif kind == "micro":
+        for r in data.get("rows", []):
+            rows[r["name"]] = {"us_per_call": r["us_per_call"]}
+    else:
+        raise ValueError(f"unknown benchmark kind {kind!r}")
+    return rows
+
+
+def compare(base_rows: dict, cur_rows: dict, default_tol: float,
+            tols: dict) -> list[dict]:
+    """One comparison record per (row, metric) of the baseline."""
+    out = []
+    for key in sorted(base_rows):
+        if key not in cur_rows:
+            out.append({"row": key, "metric": None, "status": "missing",
+                        "base": None, "cur": None, "rel": None,
+                        "tol": None})
+            continue
+        for metric in sorted(base_rows[key]):
+            base = float(base_rows[key][metric])
+            cur = cur_rows[key].get(metric)
+            tol = tols.get(metric, default_tol)
+            rec = {"row": key, "metric": metric, "base": base,
+                   "cur": None if cur is None else float(cur), "tol": tol,
+                   "rel": None}
+            if cur is None:
+                rec["status"] = "missing"
+            elif base == 0.0:
+                rec["status"] = "skipped"
+            else:
+                cur = float(cur)
+                rel = (cur - base) / base
+                rec["rel"] = rel
+                if metric in HIGHER_BETTER:
+                    regressed, improved = rel < -tol, rel > tol
+                else:
+                    regressed, improved = rel > tol, rel < -tol
+                rec["status"] = ("regression" if regressed
+                                 else "improvement" if improved else "ok")
+            out.append(rec)
+    return out
+
+
+def parse_tols(pairs: list[str]) -> dict:
+    tols = {}
+    for pair in pairs or []:
+        name, sep, raw = pair.partition("=")
+        if not sep:
+            raise ValueError(f"bad --tol {pair!r} (want metric=band)")
+        tols[name.strip()] = float(raw)
+    return tols
+
+
+def render(comparisons: list[dict]) -> str:
+    lines = [f"{'row':<34} {'metric':<24} {'base':>12} {'cur':>12} "
+             f"{'delta':>8}  status"]
+    for c in comparisons:
+        rel = "" if c["rel"] is None else f"{100.0 * c['rel']:+7.1f}%"
+        base = "" if c["base"] is None else f"{c['base']:12.3f}"
+        cur = "" if c["cur"] is None else f"{c['cur']:12.3f}"
+        mark = {"regression": " <-- REGRESSION",
+                "missing": " <-- MISSING"}.get(c["status"], "")
+        lines.append(f"{c['row']:<34} {c['metric'] or '-':<24} {base:>12} "
+                     f"{cur:>12} {rel:>8}  {c['status']}{mark}")
+    n_reg = sum(c["status"] in ("regression", "missing")
+                for c in comparisons)
+    lines.append(f"-- {len(comparisons)} comparisons, {n_reg} regression(s)")
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="benchmark regression gate (see module docstring)")
+    ap.add_argument("baseline", help="committed baseline BENCH_*.json")
+    ap.add_argument("current", help="freshly produced BENCH_*.json")
+    ap.add_argument("--default-tol", type=float, default=0.10,
+                    help="relative band for metrics without a --tol "
+                         "override (default 0.10 = 10%%)")
+    ap.add_argument("--tol", action="append", default=[],
+                    metavar="METRIC=BAND",
+                    help="per-metric band override (repeatable)")
+    ap.add_argument("--report", metavar="PATH",
+                    help="also write the comparison list as JSON")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="suppress the table; exit code only")
+    args = ap.parse_args(argv)
+    try:
+        tols = parse_tols(args.tol)
+        with open(args.baseline) as f:
+            base = json.load(f)
+        with open(args.current) as f:
+            cur = json.load(f)
+        if base.get("benchmark") != cur.get("benchmark"):
+            raise ValueError(
+                f"artifact kind mismatch: {base.get('benchmark')!r} vs "
+                f"{cur.get('benchmark')!r}")
+        comparisons = compare(rows_of(base), rows_of(cur),
+                              args.default_tol, tols)
+    except (OSError, ValueError, KeyError, json.JSONDecodeError) as e:
+        print(f"bench_diff: ERROR — {e}", file=sys.stderr)
+        return 2
+    ok = all(c["status"] not in ("regression", "missing")
+             for c in comparisons)
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump({"ok": ok, "baseline": args.baseline,
+                       "current": args.current,
+                       "default_tol": args.default_tol, "tol": tols,
+                       "comparisons": comparisons}, f, indent=1)
+    if not args.quiet:
+        print(render(comparisons))
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,12 +8,19 @@ provider session key):
 
     python tools/verify_audit.py BENCH_audit.jsonl BENCH_audit.key
 
-Exit status 0 iff the chain verifies; any edit, reorder, insertion,
-deletion or truncation of the log makes this non-zero — the CI smoke job
-runs it against the benchmark's audit artifact.
+Exit status (machine-readable for CI gates and alert pipelines):
+
+    0   chain + trailer verify
+    1   chain broken (a record was edited, reordered, inserted or forged)
+    2   trailer-level failure (missing/forged trailer, count or head
+        mismatch — i.e. truncation or out-of-band tail rewrites)
+    3   could not even try: unreadable file or malformed key
+
+``--quiet`` suppresses the report line (the exit code is the answer).
 """
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 
@@ -22,24 +29,55 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
 
 from repro.obs import verify_jsonl  # noqa: E402
 
+EXIT_OK = 0
+EXIT_CHAIN = 1
+EXIT_TRAILER = 2
+EXIT_IO = 3
 
-def main(argv: list[str]) -> int:
-    if len(argv) != 2:
-        print(__doc__.strip())
-        return 2
-    log_path, key_path = argv
-    with open(key_path) as f:
-        audit_key = bytes.fromhex(f.read().strip())
-    report = verify_jsonl(log_path, audit_key)
+
+def classify(report: dict) -> int:
+    """Map a verify_jsonl report to an exit code."""
     if report["ok"]:
-        print(f"{log_path}: OK — {report['records']} records, "
-              "chain + trailer verify")
-        return 0
+        return EXIT_OK
+    # an identified bad record index means the chain itself broke; every
+    # trailer-level failure (stripped/forged trailer, count/head mismatch)
+    # verifies all surviving records but cannot place a first_bad
+    return EXIT_CHAIN if report["first_bad"] is not None else EXIT_TRAILER
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="verify an exported audit chain (see module docstring "
+                    "for the exit-code contract)")
+    ap.add_argument("log", help="JSONL export (gateway.export_audit)")
+    ap.add_argument("key", help="hex verification key file (K_audit)")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="no report line; exit code only")
+    args = ap.parse_args(argv)
+
+    def say(msg: str) -> None:
+        if not args.quiet:
+            print(msg)
+
+    try:
+        with open(args.key) as f:
+            audit_key = bytes.fromhex(f.read().strip())
+        if not audit_key:
+            raise ValueError("empty key file")
+        report = verify_jsonl(args.log, audit_key)
+    except (OSError, ValueError) as e:
+        say(f"{args.log}: ERROR — {e}")
+        return EXIT_IO
+    rc = classify(report)
+    if rc == EXIT_OK:
+        say(f"{args.log}: OK — {report['records']} records, "
+            "chain + trailer verify")
+        return rc
     where = (f" at record {report['first_bad']}"
              if report["first_bad"] is not None else "")
-    print(f"{log_path}: FAILED{where} — {report['reason']}")
-    return 1
+    say(f"{args.log}: FAILED{where} — {report['reason']}")
+    return rc
 
 
 if __name__ == "__main__":
-    sys.exit(main(sys.argv[1:]))
+    sys.exit(main())
