@@ -9,7 +9,8 @@
                preemption-heavy traffic (off vs trusted), plus a bursty-
                admission section comparing whole-page-reseal vs slice-sealed
                open pages (sealed bytes per decode token, §3.4) across
-               prefill chunk sizes
+               prefill chunk sizes, and a shared-prefix section comparing
+               full prefill vs the sealed prefix cache (cold/warm)
   roofline     §Roofline three-term table for all 40 cells (needs
                results/dryrun.jsonl from repro.launch.dryrun)
 

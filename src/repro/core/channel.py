@@ -15,6 +15,8 @@ computing on attacker-controlled data).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import hmac
 import itertools
 from typing import Any, Callable
 
@@ -53,6 +55,33 @@ _session_ids = itertools.count(1)
 # leaf's nonce up to stride-1 times before lanes would touch.  The counting
 # guard that enforces this budget lives next to the stride (core/sealed.py).
 TREE_LEAF_STRIDE = sealed_lib.TREE_LEAF_STRIDE
+
+
+def wrap_key_words(key_words: np.ndarray, wrap_key_bytes: bytes,
+                   context: bytes) -> bytes:
+    """Wrap a uint32[2] page key to another principal's control-plane key.
+
+    The pad is HMAC(wrap_key, "key-wrap-v1" | context) truncated to the key
+    width, XORed over the raw key bytes.  Only the holder of
+    ``wrap_key_bytes`` (e.g. a tenant's session HMAC key) can unwrap; a
+    different tenant's key, or the right key with the wrong context, yields
+    garbage words — and sealed pages unsealed under garbage words fail their
+    MACs and poison.  Context binds the wrap to one (prefix, tenant) pair so
+    wraps are not transplantable across prefixes.
+    """
+    raw = np.asarray(key_words, np.uint32).tobytes()
+    pad = hmac.new(wrap_key_bytes, b"key-wrap-v1|" + context,
+                   hashlib.sha256).digest()[:len(raw)]
+    return bytes(a ^ b for a, b in zip(raw, pad))
+
+
+def unwrap_key_words(wrapped: bytes, wrap_key_bytes: bytes,
+                     context: bytes) -> np.ndarray:
+    """Inverse of :func:`wrap_key_words`; returns uint32[2] key words."""
+    pad = hmac.new(wrap_key_bytes, b"key-wrap-v1|" + context,
+                   hashlib.sha256).digest()[:len(wrapped)]
+    raw = bytes(a ^ b for a, b in zip(wrapped, pad))
+    return np.frombuffer(raw, np.uint32).copy()
 
 
 def poison_unless(ok: jax.Array, tree):

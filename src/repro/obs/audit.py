@@ -10,7 +10,8 @@ stack.  Emitters and their record kinds:
     core/channel.py      launch, launch_reject
     serve/scheduler.py   swap_out, swap_in, tamper, quarantine,
                          quarantine_reject, quarantine_release,
-                         proactive_spill
+                         proactive_spill, prefix_map, cow_break
+    serve/prefix_cache.py  prefix_publish
     serve/kv_pager.py    page_close, page_reopen, nonce_spend,
                          nonce_refresh, page_renonce
     obs/monitor.py       alert

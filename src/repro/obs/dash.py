@@ -145,6 +145,20 @@ def render(families: dict, audit_records: list[dict],
             verdict += f" (bound {_fmt(bound)})"
         lines.append(f"  {name:<16} {_fmt(value):>10}{verdict}")
 
+    # -- sealed prefix cache ---------------------------------------------
+    hits = _fam_value(families, "prefix_hits_total")
+    misses = _fam_value(families, "prefix_misses_total")
+    if hits is not None or misses is not None:
+        hits, misses = hits or 0, misses or 0
+        rate = 100.0 * hits / (hits + misses) if (hits + misses) else 0.0
+        lines.append(
+            "prefix cache: "
+            f"published={_fmt(_fam_value(families, 'prefix_published_total'))}"
+            f" hits={_fmt(hits)} misses={_fmt(misses)}"
+            f" hit_rate={rate:.1f}%"
+            f" pages_saved={_fmt(_fam_value(families, 'prefix_pages_saved_total'))}"
+            f" cow_breaks={_fmt(_fam_value(families, 'kv_pool_cow_breaks_total'))}")
+
     # -- per-tenant posture ---------------------------------------------
     if posture is None:
         posture = {}

@@ -167,6 +167,7 @@ class PagedEngine:
         self._close = jax.jit(self._close_impl)
         self._reopen = jax.jit(self._reopen_impl)
         self._renonce = jax.jit(self._renonce_impl)
+        self._cow = jax.jit(self._cow_impl)
 
     @property
     def open_pages(self) -> bool:
@@ -281,12 +282,20 @@ class PagedEngine:
             lp, kc, vc = xs                                       # kc [B,T,K,hd]
             h = L.rms_norm(xc, lp["ln1"], cfg.norm_eps)
             q, kn, vn = L.project_qkv(lp["attn"], cfg, h, positions)
+            # extend the cache by C rows before inserting the chunk:
+            # ``start`` is page-aligned but need not be C-aligned (a prefix
+            # cache hit resumes at the shared floor), and an insert whose
+            # window overruns T would be silently CLAMPED to fit — landing
+            # the chunk at the wrong rows.  The C extension keeps any
+            # start <= T in bounds; rows past the last valid query are
+            # causally masked, so the padding never reaches the output.
+            ext = jnp.zeros((B, C) + kc.shape[2:], kc.dtype)
             kc2 = jax.vmap(
                 lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (p, 0, 0))
-            )(kc, kn, start)
+            )(jnp.concatenate([kc, ext], axis=1), kn, start)
             vc2 = jax.vmap(
                 lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (p, 0, 0))
-            )(vc, vn, start)
+            )(jnp.concatenate([vc, ext], axis=1), vn, start)
             a = L.gqa_attention(q, kc2, vc2, causal=True,
                                 q_block=cfg.q_block, base_pos=start)
             xc = xc + L.attn_out(lp["attn"], a, B, C)
@@ -523,6 +532,54 @@ class PagedEngine:
         self.pool.note_renonce(page, ok)
         if was_open:
             ok = self.reopen_page(page, fill_n) and ok
+        return ok
+
+    # -- copy-on-write break of a shared prefix page ---------------------
+    def _cow_impl(self, pool_arrays, src, dst, src_key, fill_n):
+        (k_ct, v_ct, k_tags, v_tags, k_stags, v_stags, nonces, keys,
+         open_flags, fill) = pool_arrays
+        kct2, vct2, kst, vst, ok = kv_pager.cow_page(
+            k_ct[src], v_ct[src], k_tags[src], v_tags[src],
+            src_key, nonces[src], keys[dst], nonces[dst],
+            self.cfg.act_dtype, self.pool.chunk_words)
+        k_ct = k_ct.at[dst].set(kct2)
+        v_ct = v_ct.at[dst].set(vct2)
+        k_tags = k_tags.at[dst].set(0)
+        v_tags = v_tags.at[dst].set(0)
+        k_stags = k_stags.at[dst].set(kst)
+        v_stags = v_stags.at[dst].set(vst)
+        open_flags = open_flags.at[dst].set(True)
+        fill = fill.at[dst].set(fill_n)
+        return ok, (k_ct, v_ct, k_tags, v_tags, k_stags, v_stags, nonces,
+                    keys, open_flags, fill)
+
+    def cow_page(self, src: int, dst: int, src_key_words, fill: int) -> bool:
+        """Copy-on-write: unseal shared page ``src`` under the (unwrapped)
+        prefix key and re-seal its contents into the tenant-owned page
+        ``dst`` as an OPEN page with ``fill`` valid slots.
+
+        ``src_key_words`` comes from unwrapping the prefix entry's wrapped
+        key with the tenant's session key — a tenant holding the wrong wrap
+        gets garbage words here, the unseal MAC fails, and the destination
+        tags are written corrupted (poison-on-use).  The shared original is
+        read-only and untouched.
+        """
+        if not self.pool.sealed:
+            self.pool.k_ct = self.pool.k_ct.at[dst].set(self.pool.k_ct[src])
+            self.pool.v_ct = self.pool.v_ct.at[dst].set(self.pool.v_ct[src])
+            self.pool.mark_open([dst], fill)
+            self.pool.note_cow(src, dst, True)
+            return True
+        with self.tracer.span("engine.cow_page", cat="engine",
+                              args={"src": int(src), "dst": int(dst)}):
+            ok, arrays = self._cow(
+                self.pool.arrays(), jnp.asarray(src, jnp.int32),
+                jnp.asarray(dst, jnp.int32),
+                jnp.asarray(np.asarray(src_key_words, np.uint32)),
+                jnp.asarray(fill, jnp.int32))
+            self.pool.update_arrays(arrays)
+        ok = bool(ok)
+        self.pool.note_cow(src, dst, ok)
         return ok
 
     # -- decode ----------------------------------------------------------

@@ -40,10 +40,12 @@ from ..obs import rules as obs_rules
 from ..store import SealedStore
 from .engine import PagedEngine
 from .kv_pager import PagedKVPool
+from .prefix_cache import PREFIX_TENANT, PrefixRegistry
 from .scheduler import Scheduler
 from .sessions import SessionManager
 
 PROVIDER = "_provider"
+RESERVED_TENANTS = (PROVIDER, PREFIX_TENANT)
 
 
 class SecureGateway:
@@ -103,10 +105,18 @@ class SecureGateway:
             cfg=cfg, params=params_dev, channel=provider, pool=self.pool,
             max_slots=max_slots, max_pages=max_pages_per_seq,
             prefill_chunk=prefill_chunk, tracer=self.tracer)
+        # the prefix-cache publisher gets its own attested session: shared
+        # prefix pages seal under per-entry keys derived from THIS channel,
+        # never under the provider's weight/launch channel or a tenant key
+        prefix_ch = self.sessions.register(PREFIX_TENANT).channel
+        self.prefixes = PrefixRegistry(
+            self.engine, self.pool, self.store, self.sessions, prefix_ch,
+            audit=self.audit, metrics=self.registry)
         self.scheduler = Scheduler(self.engine, self.pool, self.sessions,
                                    max_slots, max_pages_per_seq,
                                    store=self.store, provider=provider,
-                                   tracer=self.tracer, audit=self.audit)
+                                   tracer=self.tracer, audit=self.audit,
+                                   prefixes=self.prefixes)
         self._t_start = time.monotonic()
         self._c_steps = self.registry.counter(
             "gateway_steps_total", "scheduling steps this window")
@@ -141,9 +151,21 @@ class SecureGateway:
     # -- tenant + request lifecycle -------------------------------------
     def register_tenant(self, tenant_id: str):
         """Run the §3.2 attestation handshake for a tenant (idempotent)."""
-        if tenant_id == PROVIDER:
+        if tenant_id in RESERVED_TENANTS:
             raise ValueError("reserved tenant id")
         return self.sessions.register(tenant_id)
+
+    def register_prefix(self, tokens):
+        """Publish a shared prompt prefix (system prompt, few-shot header):
+        prefilled once under the prefix channel, sealed per-entry,
+        content-hashed into the store, mapped read-only into any matching
+        request.  Idempotent per token sequence. -> PrefixEntry"""
+        return self.prefixes.register(np.asarray(tokens, np.int32))
+
+    def evict_prefix(self, prefix_id: int) -> bool:
+        """Retire a published prefix (pages freed once the last reader
+        unmaps; new submits stop matching immediately)."""
+        return self.prefixes.evict(prefix_id)
 
     def submit(self, tenant_id: str, prompt, max_new: int,
                priority: int = 0) -> int:
@@ -215,7 +237,7 @@ class SecureGateway:
 
     def _on_alert_quarantine(self, alert) -> None:
         tenant = alert.tenant
-        if not tenant or tenant == PROVIDER:
+        if not tenant or tenant in RESERVED_TENANTS:
             return
         if self.sessions.is_quarantined(tenant):
             return
@@ -232,8 +254,8 @@ class SecureGateway:
     # -- quarantine (operator surface) ------------------------------------
     def quarantine(self, tenant_id: str, reason: str = "manual") -> list:
         """Drain + bar a tenant; returns the drained rids (audit-logged)."""
-        if tenant_id == PROVIDER:
-            raise ValueError("cannot quarantine the provider session")
+        if tenant_id in RESERVED_TENANTS:
+            raise ValueError("cannot quarantine a reserved session")
         return self.scheduler.quarantine_tenant(tenant_id, reason=reason)
 
     def release_quarantine(self, tenant_id: str) -> bool:
@@ -322,6 +344,18 @@ class SecureGateway:
                 else 0.0),
             "page_closes": ps_stats["page_closes"],
             "page_reopens": ps_stats["page_reopens"],
+            # sealed prefix cache
+            "prefix_published": int(self.prefixes._c_published.value),
+            "prefix_hits": int(self.prefixes._c_hits.value),
+            "prefix_misses": int(self.prefixes._c_misses.value),
+            "prefix_hit_rate": (
+                self.prefixes._c_hits.value
+                / (self.prefixes._c_hits.value
+                   + self.prefixes._c_misses.value)
+                if (self.prefixes._c_hits.value
+                    + self.prefixes._c_misses.value) else 0.0),
+            "prefix_pages_saved": int(self.prefixes._c_pages_saved.value),
+            "prefix_cow_breaks": int(self.pool._c_cow_breaks.value),
             "tokens_per_tenant": per_tenant,
             "kv_pages_peak": self.pool.stats["peak_live"],
             "kv_pages_free": self.pool.free_pages,

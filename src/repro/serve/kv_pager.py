@@ -265,6 +265,34 @@ def close_page(kct: jax.Array, vct: jax.Array, k_stags: jax.Array,
     return kct2, vct2, ktags ^ poison, vtags ^ poison, ok
 
 
+def cow_page(kct: jax.Array, vct: jax.Array, ktags: jax.Array,
+             vtags: jax.Array, src_key: jax.Array, src_nonce: jax.Array,
+             dst_key: jax.Array, dst_nonce: jax.Array, dtype,
+             chunk_words: int):
+    """Copy-on-write break of a shared prefix page.
+
+    Verify + decrypt a CLOSED shared page under the *source* key (the
+    prefix-entry key, obtained by unwrapping the tenant's key-wrap), then
+    re-seal the same plaintext as an OPEN page under the *destination*
+    tenant's key and a fresh nonce lane, emitting per-slot slice tags so
+    decode can append at the divergence slot.  Returns (kct2, vct2,
+    k_stags, v_stags, ok); the emitted slice tags are corrupted on
+    ok=False, so neither a tampered shared original nor a wrongly
+    unwrapped source key can launder into a valid private page.
+    """
+    k, v, ok = unseal_page(kct, vct, ktags, vtags, src_key, src_nonce,
+                           dtype, chunk_words)
+    dst_nonce = jnp.asarray(dst_nonce, jnp.uint32)
+    kk = cipher.derive_key(dst_key, KV_K_DOMAIN)
+    vk = cipher.derive_key(dst_key, KV_V_DOMAIN)
+    kct2 = cipher.seal_bits(k, kk, dst_nonce)
+    vct2 = cipher.seal_bits(v, vk, dst_nonce)
+    k_stags, v_stags = page_slot_tags(kct2, vct2, dst_key, dst_nonce,
+                                      chunk_words)
+    poison = jnp.where(ok, jnp.uint32(0), jnp.uint32(0xA5A5A5A5))
+    return kct2, vct2, k_stags ^ poison, v_stags ^ poison, ok
+
+
 def reopen_page(kct: jax.Array, vct: jax.Array, ktags: jax.Array,
                 vtags: jax.Array, base_key: jax.Array, nonce: jax.Array,
                 dtype, chunk_words: int):
@@ -330,6 +358,12 @@ class PagedKVPool:
         self._free = deque(range(1, self.n_pages))
         self._owner: dict[int, str] = {}
         self._nonce_guard: dict[int, sealed_guard.NonceSpanGuard] = {}
+        # shared (prefix-cache) pages: page -> count of live request
+        # mappings.  A page in _refs is read-only and owned by its
+        # publisher; it leaves the pool only through release_shared, and
+        # only once every mapping has been dropped.
+        self._refs: dict[int, int] = {}
+        self._pending_release: set[int] = set()
         if self.metrics is None:
             self.metrics = MetricsRegistry()
         reg = self.metrics
@@ -359,6 +393,17 @@ class PagedKVPool:
         self._c_page_renonces = reg.counter(
             "kv_pool_page_renonces_total",
             "pages re-sealed under a fresh nonce lane")
+        # prefix-cache sharing (lifetime: allocator-class bookkeeping)
+        self._c_shared_maps = reg.counter(
+            "kv_pool_shared_maps_total",
+            "shared-page mappings handed to requests", windowed=False)
+        self._c_shared_unmaps = reg.counter(
+            "kv_pool_shared_unmaps_total",
+            "shared-page mappings returned", windowed=False)
+        self._c_cow_breaks = reg.counter(
+            "kv_pool_cow_breaks_total",
+            "shared pages copied-on-write into private pages",
+            windowed=False)
         # historical dict read surface (pool.stats["allocs"], ...)
         self.stats = StatsView(reg, {
             "allocs": "kv_pool_allocs_total",
@@ -458,9 +503,19 @@ class PagedKVPool:
 
     def free(self, pages: list[int]) -> None:
         """Return pages to the free list; un-brand them so a stale page table
-        entry can never verify against a past tenant's data."""
+        entry can never verify against a past tenant's data.
+
+        Shared (refcounted) pages are never freed here — a caller mixing
+        shared pages into a free list is a lifecycle bug that would
+        corrupt other tenants' mappings, so it raises instead of freeing.
+        """
         if not pages:
             return
+        shared = [p for p in pages if p in self._refs]
+        if shared:
+            raise ValueError(
+                f"free() on shared pages {shared} — use unmap_shared / "
+                "release_shared for refcounted prefix pages")
         idx = jnp.asarray(pages, jnp.int32)
         self.keys = self.keys.at[idx].set(0)
         self.nonces = self.nonces.at[idx].set(0)
@@ -475,6 +530,85 @@ class PagedKVPool:
             self._nonce_guard.pop(p, None)
             self._free.append(p)
         self._c_frees.inc(len(pages))
+
+    # -- shared (prefix-cache) pages -------------------------------------
+    def make_shared(self, pages: list[int]) -> None:
+        """Mark allocated pages as shared/read-only (refcount 0).
+
+        The publisher keeps ownership (its key stays branded); requests
+        take read-only mappings via ``map_shared``.  From here on the
+        pages cannot be freed or re-sealed by any single tenant's
+        lifecycle — only ``release_shared`` by the publisher retires them.
+        """
+        for p in pages:
+            if p not in self._owner:
+                raise ValueError(f"page {p} is not allocated")
+            if p in self._refs:
+                raise ValueError(f"page {p} is already shared")
+            self._refs[p] = 0
+
+    def map_shared(self, pages: list[int]) -> None:
+        """Take one read-only mapping per page for a request."""
+        for p in pages:
+            if p not in self._refs:
+                raise ValueError(f"page {p} is not a shared page")
+            self._refs[p] += 1
+        self._c_shared_maps.inc(len(pages))
+
+    def unmap_shared(self, pages: list[int]) -> None:
+        """Drop one mapping per page.  Never double-frees: a page whose
+        refcount would go negative raises, and the physical page is only
+        reclaimed when the publisher has already released it AND the last
+        mapping drops."""
+        retire = []
+        for p in pages:
+            if self._refs.get(p, 0) <= 0:
+                raise ValueError(
+                    f"unmap_shared on page {p} with no live mapping")
+            self._refs[p] -= 1
+            if self._refs[p] == 0 and p in self._pending_release:
+                retire.append(p)
+        self._c_shared_unmaps.inc(len(pages))
+        if retire:
+            self._retire_shared(retire)
+
+    def release_shared(self, pages: list[int]) -> None:
+        """Publisher retires shared pages: freed now if unmapped, else
+        deferred until the last reader unmaps."""
+        retire = []
+        for p in pages:
+            if p not in self._refs:
+                raise ValueError(f"page {p} is not a shared page")
+            if self._refs[p] == 0:
+                retire.append(p)
+            else:
+                self._pending_release.add(p)
+        if retire:
+            self._retire_shared(retire)
+
+    def _retire_shared(self, pages: list[int]) -> None:
+        for p in pages:
+            del self._refs[p]
+            self._pending_release.discard(p)
+        self.free(pages)
+
+    def is_shared(self, page: int) -> bool:
+        return page in self._refs
+
+    def ref_count(self, page: int) -> int:
+        return self._refs.get(page, 0)
+
+    @property
+    def shared_pages(self) -> list[int]:
+        return sorted(self._refs)
+
+    def note_cow(self, src: int, dst: int, ok: bool) -> None:
+        """Record a COW break (cost: one unseal + one whole-page seal under
+        the tenant key, charged to the decode bucket — it replaces the
+        first decode write into the shared page)."""
+        self._c_cow_breaks.inc()
+        if self.sealed:
+            self._c_sealed["decode"].inc(2 * self.page_bytes)
 
     # -- §3.4 cost accounting (the engine reports, the pool owns) --------
     def note_prefill(self, pages_written: int) -> None:

@@ -40,6 +40,7 @@ from collections import deque
 
 import numpy as np
 
+from ..core import channel as channel_lib
 from ..obs import StatsView, Tracer, request_tid
 from ..store import SealedStore, StoreError, choose_victim
 from .engine import TOKEN_POISON, PagedEngine
@@ -79,6 +80,9 @@ class Request:
     swap_nonces: np.ndarray | None = None   # enclave-retained page nonces
     swap_spent: list | None = None  # per-page nonce-span bumps consumed
     resume_prefill: bool = False    # swapped out mid-prefill
+    prefix_id: int = -1             # matched prefix-cache entry (-1 = miss)
+    n_shared: int = 0               # shared pages at the head of ``pages``
+    shared_mapped: bool = False     # refcounts currently held in the pool
 
     @property
     def prompt_len(self) -> int:
@@ -103,10 +107,11 @@ class Scheduler:
     def __init__(self, engine: PagedEngine, pool: PagedKVPool,
                  sessions: SessionManager, max_slots: int, max_pages: int,
                  store: SealedStore | None = None, provider=None,
-                 tracer: Tracer | None = None, audit=None):
+                 tracer: Tracer | None = None, audit=None, prefixes=None):
         self.engine = engine
         self.pool = pool
         self.sessions = sessions
+        self.prefixes = prefixes    # PrefixRegistry (attached by gateway)
         self.provider = provider    # provider SecureChannel: MACs the
                                     # batched prefill-chunk dispatch
         self.max_slots = max_slots
@@ -165,9 +170,16 @@ class Scheduler:
             self.audit.append(kind, tenant=tenant, **detail)
 
     # -- submission ------------------------------------------------------
-    def required_pages(self, req: Request) -> int:
+    def total_pages(self, req: Request) -> int:
+        """Logical page-table length: shared prefix pages + private pages."""
         ps = self.pool.page_size
         return -(-(req.prompt_len + req.max_new) // ps)
+
+    def required_pages(self, req: Request) -> int:
+        """Pages the request must *allocate* — shared prefix pages are
+        mapped read-only, not allocated, so a cache hit shrinks the
+        admission footprint (and the preemption feasibility math)."""
+        return self.total_pages(req) - req.n_shared
 
     def submit(self, tenant_id: str, prompt: np.ndarray, max_new: int,
                priority: int = 0) -> int:
@@ -183,11 +195,16 @@ class Scheduler:
                       max_new=max_new, priority=priority, t_submit=now,
                       t_last=now)
         usable = self.pool.n_pages - 1          # page 0 is scratch
-        if self.required_pages(req) > min(self.max_pages, usable):
+        if self.total_pages(req) > min(self.max_pages, usable):
             raise ValueError(
-                f"request needs {self.required_pages(req)} pages > "
+                f"request needs {self.total_pages(req)} pages > "
                 f"min(max_pages_per_seq={self.max_pages}, pool={usable}) — "
                 "it could never be admitted")
+        if self.prefixes is not None:
+            hit = self.prefixes.lookup(prompt)
+            if hit is not None:
+                req.prefix_id = hit.prefix_id
+                req.n_shared = hit.n_full
         self._next_rid += 1
         self.requests[req.rid] = req
         self.queue.append(req)
@@ -320,6 +337,12 @@ class Scheduler:
             req = self._next_waiter()
             if req is None:
                 return
+            if (req.prefix_id >= 0 and not req.shared_mapped
+                    and (self.prefixes is None
+                         or self.prefixes.get(req.prefix_id) is None)):
+                # the entry was evicted while this request queued — fall
+                # back to an ordinary unshared admission
+                req.prefix_id, req.n_shared = -1, 0
             n_pages = self.required_pages(req)
             slot = self._free_slot()
             if slot is None or n_pages > self.pool.free_pages:
@@ -328,7 +351,9 @@ class Scheduler:
                 # evicting the eligible class actually admits the waiter
                 eligible = [r for r in self.active
                             if r.priority < req.priority]
-                reclaimable = sum(len(r.pages) for r in eligible)
+                # shared prefix pages are not reclaimable by preempting any
+                # single request — only its private pages return to the pool
+                reclaimable = sum(len(r.pages) - r.n_shared for r in eligible)
                 if ((slot is None and not eligible)
                         or self.pool.free_pages + reclaimable < n_pages):
                     return      # wait: swapping now would be futile
@@ -342,6 +367,9 @@ class Scheduler:
                 self._admit_fresh(req, slot, events)
 
     def _admit_fresh(self, req: Request, slot: int, events: dict) -> None:
+        entry = (self.prefixes.get(req.prefix_id)
+                 if self.prefixes is not None and req.prefix_id >= 0
+                 else None)
         n_pages = self.required_pages(req)
         sess = self.sessions.get(req.tenant_id)
         # rotation point: tenant has no sealed state in flight right now
@@ -351,16 +379,74 @@ class Scheduler:
         ch = sess.channel
         ps = self.pool.page_size
         nonces = [ch.fresh_nonce(span=ps + 2) for _ in range(n_pages)]
-        req.pages = self.pool.alloc(n_pages, req.tenant_id,
-                                    ch.key_words, nonces, span=ps + 2)
+        priv = self.pool.alloc(n_pages, req.tenant_id,
+                               ch.key_words, nonces, span=ps + 2)
         req.slot = slot
-        req.status = "prefilling"
-        req.prefill_pos = 0
         req.t_last = time.monotonic()
         self.slots[slot] = req
-        self.tracer.begin(("req", req.rid), "prefill", cat="request",
-                          tid=request_tid(req.rid),
-                          args={"pages": n_pages, "slot": slot})
+        if entry is None:
+            req.pages = priv
+            req.status = "prefilling"
+            req.prefill_pos = 0
+            self.tracer.begin(("req", req.rid), "prefill", cat="request",
+                              tid=request_tid(req.rid),
+                              args={"pages": n_pages, "slot": slot})
+            return
+        # -- prefix-cache hit: map the shared full pages read-only -------
+        shared = list(entry.pages[:entry.n_full])
+        self.pool.map_shared(shared)
+        req.pages = shared + priv
+        req.n_shared = entry.n_full
+        req.shared_mapped = True
+        # grant: the entry's page key wrapped to THIS tenant's session key,
+        # bound to (prefix, tenant) — the only road from a tenant session
+        # to the prefix plaintext runs through this unwrap
+        wrapped = self.prefixes.wrap_for(entry, req.tenant_id)
+        self.prefixes.note_map(entry, entry.n_full)
+        self._audit("prefix_map", req.tenant_id, rid=req.rid,
+                    prefix_id=entry.prefix_id, object=entry.object_id,
+                    n_shared=entry.n_full, wrapped=wrapped.hex())
+        zero_suffix = req.prompt_len == entry.length
+        ok = True
+        if zero_suffix and entry.tail_fill:
+            # divergence mid-page with nothing left to prefill: break the
+            # shared partial tail copy-on-write into the tenant's first
+            # private page, under the key the tenant just unwrapped
+            src_key = channel_lib.unwrap_key_words(
+                wrapped, ch.key_bytes,
+                self.prefixes.wrap_context(entry.prefix_id, req.tenant_id))
+            self.pool.map_shared([entry.tail_page])
+            ok = self.engine.cow_page(entry.tail_page, priv[0], src_key,
+                                      entry.tail_fill)
+            self.pool.unmap_shared([entry.tail_page])
+            self._audit("cow_break", req.tenant_id, rid=req.rid,
+                        prefix_id=entry.prefix_id, src=int(entry.tail_page),
+                        dst=int(priv[0]), fill=entry.tail_fill, ok=bool(ok))
+        if zero_suffix:
+            # the whole prompt is cached: skip prefill, join decode with
+            # the greedy first token computed once at publish (decode is
+            # deterministic, so it is bitwise what this lane would emit)
+            req.prefill_pos = req.prompt_len
+            req.status = "running"
+            req.t_first = time.monotonic()
+            self.tracer.begin(("req", req.rid), "decode", cat="request",
+                              tid=request_tid(req.rid),
+                              args={"pages": n_pages, "slot": slot,
+                                    "prefix": entry.prefix_id})
+            good = ok and entry.first_ok
+            self._record_token(req, entry.first_token if good
+                               else TOKEN_POISON, events, ok=good)
+        else:
+            # suffix diverges at/after the shared full pages: re-prefill
+            # from the page-aligned floor (chunks write whole pages, and
+            # recomputed KV is bitwise-identical for identical tokens)
+            req.prefill_pos = entry.n_full * ps
+            req.status = "prefilling"
+            self.tracer.begin(("req", req.rid), "prefill", cat="request",
+                              tid=request_tid(req.rid),
+                              args={"pages": n_pages, "slot": slot,
+                                    "prefix": entry.prefix_id,
+                                    "skip_tokens": req.prefill_pos})
 
     # -- chunked batched prefill ----------------------------------------
     def _prefill_step(self, events: dict) -> None:
@@ -451,7 +537,10 @@ class Scheduler:
                     self._poison_unreadable(victim, events)
                     return
         victim.resume_prefill = victim.status == "prefilling"
-        pages = list(victim.pages)
+        # shared prefix pages are exempt from preemption: they are mapped,
+        # not owned, so only the private suffix spills — the read-only
+        # mapping (and its refcount) rides out the swap untouched
+        pages = list(victim.pages[victim.n_shared:])
         self.tracer.instant("swap_out", cat="request",
                             tid=request_tid(victim.rid),
                             args={"rid": victim.rid, "pages": len(pages)})
@@ -478,8 +567,8 @@ class Scheduler:
                     freshness=victim.swaps_out, seq_len=victim.seq_len)
         self.slots[victim.slot] = None
         victim.slot = -1
-        self.pool.free(victim.pages)
-        victim.pages = []
+        self.pool.free(pages)
+        victim.pages = victim.pages[:victim.n_shared]
         victim.status = "swapped"
         self.queue.append(victim)
         events["preempted"].append(victim.rid)
@@ -503,12 +592,14 @@ class Scheduler:
             self._poison_unreadable(req, events)
             return
         n_pages = len(req.swap_nonces)
-        req.pages = self.pool.alloc(
+        priv = self.pool.alloc(
             n_pages, req.tenant_id,
             self.sessions.channel(req.tenant_id).key_words, req.swap_nonces,
             span=self.pool.page_size + 2, spent=req.swap_spent)
-        self.pool.write_pages(req.pages, chunks["k_ct"], chunks["v_ct"],
+        self.pool.write_pages(priv, chunks["k_ct"], chunks["v_ct"],
                               chunks["k_tags"], chunks["v_tags"])
+        # req.pages kept its shared prefix head across the swap
+        req.pages = req.pages + priv
         self.store.delete(swap_object_id(req.rid))
         req.swaps_in += 1
         self._c_swaps["swap_ins"].inc()
@@ -622,7 +713,14 @@ class Scheduler:
         if req.slot >= 0:
             self.slots[req.slot] = None
             req.slot = -1
-        self.pool.free(req.pages)
+        if req.shared_mapped:
+            # drop the read-only mappings; the shared pages themselves stay
+            # in the pool for other readers (refcounted — a quarantined or
+            # poisoned tenant's drain can never free them out from under
+            # someone else's page table)
+            self.pool.unmap_shared(req.pages[:req.n_shared])
+            req.shared_mapped = False
+        self.pool.free(req.pages[req.n_shared:])
         req.pages = []
         if self.store.exists(swap_object_id(req.rid)):
             self.store.delete(swap_object_id(req.rid))

@@ -10,10 +10,12 @@ The CI perf-regression gate:
 Both files must be the same artifact kind, autodetected from their
 ``benchmark`` field:
 
-    serve_gateway   rows keyed by (mode, scenario) from the ``grid`` list
-                    and (write_back, prefill_chunk) from ``burst``;
-                    compared metrics: tok_per_s, p50_token_ms,
-                    p95_token_ms, mean_ttft_ms, sealed_bytes_per_token
+    serve_gateway   rows keyed by (mode, scenario) from the ``grid`` list,
+                    (write_back, prefill_chunk) from ``burst`` and
+                    ``label`` from ``prefix``; compared metrics:
+                    tok_per_s, p50_token_ms, p95_token_ms, mean_ttft_ms,
+                    sealed_bytes_per_token, pages_per_request,
+                    prefix_hit_rate
     micro           rows keyed by ``name``; compared metric: us_per_call
 
 Comparison is *relative* and direction-aware: a lower-is-better metric
@@ -37,7 +39,8 @@ import sys
 SERVE_METRICS = ("tok_per_s", "p50_token_ms", "p95_token_ms",
                  "mean_ttft_ms", "sealed_bytes_per_token")
 BURST_METRICS = ("mean_ttft_ms", "sealed_bytes_per_token")
-HIGHER_BETTER = {"tok_per_s"}
+PREFIX_METRICS = ("mean_ttft_ms", "pages_per_request", "prefix_hit_rate")
+HIGHER_BETTER = {"tok_per_s", "prefix_hit_rate"}
 
 
 def rows_of(data: dict) -> dict:
@@ -54,6 +57,11 @@ def rows_of(data: dict) -> dict:
             key = f"burst/{cell['write_back']}/chunk={chunk or 'max'}"
             m = cell.get("metrics", {})
             rows[key] = {k: m[k] for k in BURST_METRICS if k in m}
+        for cell in data.get("prefix", []):
+            # prefix rows carry their headline numbers at the top level
+            # (pages_per_request is derived, not a registry metric)
+            rows[f"prefix/{cell['label']}"] = {
+                k: cell[k] for k in PREFIX_METRICS if cell.get(k) is not None}
     elif kind == "micro":
         for r in data.get("rows", []):
             rows[r["name"]] = {"us_per_call": r["us_per_call"]}
