@@ -46,6 +46,11 @@ Artifacts (written to the working directory, see docs/OBSERVABILITY.md):
                                tools/verify_audit.py
     BENCH_metrics.prom         that cell's Prometheus exposition — feed it
                                to tools/obs_dash.py with the audit JSONL
+    BENCH_profile.json         per-phase cost attribution + dispatches per
+                               step + predicted-vs-measured drift table
+                               (gateway.profile_report()) — bench-gated by
+                               tools/bench_diff.py on the deterministic
+                               columns
 
 The committed repo-root BENCH_serve_gateway.json / BENCH_micro.json are the
 CI perf baselines: the bench-gate job re-runs ``run.py --smoke`` and diffs
@@ -174,16 +179,29 @@ def _export_obs(gw, result: dict, out_dir: str) -> dict:
     audit_path = f"{out_dir}/BENCH_audit.jsonl"
     key_path = f"{out_dir}/BENCH_audit.key"
     prom_path = f"{out_dir}/BENCH_metrics.prom"
+    profile_path = f"{out_dir}/BENCH_profile.json"
     n_events = gw.export_trace(trace_path, fmt="chrome")
     n_records = gw.export_audit(audit_path, key_path=key_path)
     with open(prom_path, "w") as f:
         f.write(gw.metrics_text())
+    prof = gw.profile_report()
+    with open(profile_path, "w") as f:
+        json.dump(prof, f, indent=1, default=_jsonable)
+    print(f"profile: {prof['dispatches_per_step']:.2f} dispatches/step "
+          f"@ occupancy {prof['max_occupancy']} "
+          f"({prof['dispatch_total']} total over {prof['steps']} steps)")
+    for row in prof["phases"]:
+        drift = (f"{row['ratio']:.1f}x" if row["ratio"] is not None
+                 else "-")
+        print(f"  {row['phase']:<16} calls={row['calls']:<5} "
+              f"sealed_B={row['sealed_bytes']:<9} "
+              f"wall_us={row['wall_us']:<11.0f} drift={drift}")
     report = gw.verify_audit()
     if not report["ok"]:
         raise RuntimeError(f"audit chain failed verification: {report}")
     result["artifacts"].update(
         {"trace": trace_path, "audit": audit_path, "audit_key": key_path,
-         "metrics_prom": prom_path})
+         "metrics_prom": prom_path, "profile": profile_path})
     summary = {"records": n_records, "trace_events": n_events,
                "kinds": gw.audit.kinds(), "verify": report}
     if gw.monitor is not None:

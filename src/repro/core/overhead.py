@@ -49,22 +49,27 @@ class AcceleratorModel:
     mac_pipelined: bool             # paper's GFM: False (serial); tree MAC: True
     chunk_bytes: int = 2048         # MAC verification granularity s
 
-    def step_cycles(self, w: Workload, prot: Protection) -> float:
-        """Cycle estimate: compute/memory overlap, crypto bound to memory path."""
-        compute = w.flops / self.flops_per_cycle
-        mem = w.bytes_total / self.dram_bytes_per_cycle
+    def crypto_cycles(self, n_bytes: float, encrypts: bool = True,
+                      authenticates: bool = True) -> float:
+        """Crypto-engine cycles to seal/unseal ``n_bytes`` through the
+        memory path.  Shared by ``step_cycles`` and the cost-attribution
+        ledger (obs/costs.py ``CostLedger.reconcile``), so the per-phase
+        drift report prices bytes with exactly the model the roofline uses.
+        """
+        if n_bytes <= 0:
+            return 0.0
         crypto = 0.0
-        if prot.encrypts:
+        if encrypts:
             # CTR is pipelined: adds latency per chunk but streams at full rate.
-            n_chunks = max(1.0, w.bytes_total / self.chunk_bytes)
-            crypto += (w.bytes_total / self.ctr_bytes_per_cycle
+            n_chunks = max(1.0, n_bytes / self.chunk_bytes)
+            crypto += (n_bytes / self.ctr_bytes_per_cycle
                        + n_chunks * self.ctr_pipeline_latency)
-        if prot.authenticates:
-            blocks = w.bytes_total / 16.0
+        if authenticates:
+            blocks = n_bytes / 16.0
             if self.mac_pipelined:
                 # tree MAC: log-depth, streams with the fetch; model as an
                 # extra pass at CTR-like throughput plus per-chunk log depth.
-                n_chunks = max(1.0, w.bytes_total / self.chunk_bytes)
+                n_chunks = max(1.0, n_bytes / self.chunk_bytes)
                 import math
                 depth = math.ceil(math.log2(max(2.0, self.chunk_bytes / 16.0)))
                 crypto += blocks + n_chunks * depth
@@ -72,6 +77,14 @@ class AcceleratorModel:
                 # paper's serial GFM: ceil(s/128bit) * 8 cycles, fully serial,
                 # NOT overlapped with the fetch stream.
                 crypto += blocks * self.mac_cycles_per_16b
+        return crypto
+
+    def step_cycles(self, w: Workload, prot: Protection) -> float:
+        """Cycle estimate: compute/memory overlap, crypto bound to memory path."""
+        compute = w.flops / self.flops_per_cycle
+        mem = w.bytes_total / self.dram_bytes_per_cycle
+        crypto = self.crypto_cycles(w.bytes_total, encrypts=prot.encrypts,
+                                    authenticates=prot.authenticates)
         # compute overlaps with (mem + crypto) up to the max (double buffering);
         # serial MAC does not overlap, which the max() structure captures since
         # crypto inflates the memory-path term.

@@ -13,6 +13,13 @@ and the trust substrate:
     swaps, tamper poisonings) where truncation and in-place edits are
     detectable by ``verify_chain()``.
 
+``profiler`` + ``costs`` add per-phase attribution on top: a step-scoped
+``Profiler`` with device-synchronized phase timing and jitted-dispatch
+counting, feeding a ``CostLedger`` that attributes sealed bytes, cipher
+blocks and MAC/tag operations per engine phase and per tenant, reconciled
+against the analytic model of core/overhead.py (the drift report behind
+BENCH_profile.json and the bench-gate dispatch band).
+
 On top of the three sits the streaming ``Monitor`` (monitor.py + rules.py):
 declarative SLO / storm / headroom rules evaluated once per gateway step,
 emitting typed ``Alert``s and driving scheduler actions (quarantine,
@@ -21,10 +28,13 @@ the whole posture as a terminal snapshot, live or from exported files.
 """
 from .audit import (AuditError, AuditLog, derive_audit_key,  # noqa: F401
                     verify_jsonl, verify_records)
+from .costs import (PHASES, CostLedger, cipher_blocks_for,  # noqa: F401
+                    mac_ops_for)
 from .dash import parse_prometheus, render, render_gateway  # noqa: F401
 from .metrics import (Counter, Gauge, Histogram, MetricError,  # noqa: F401
                       MetricsRegistry, StatsView, escape_label_value)
 from .monitor import Monitor, Sample  # noqa: F401
+from .profiler import Profiler  # noqa: F401
 from .rules import (Alert, ChainRule, HeadroomRule,  # noqa: F401
                     MonitorConfig, SloRule, StormRule, default_rules,
                     parse_slo_overrides)

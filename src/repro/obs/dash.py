@@ -159,6 +159,29 @@ def render(families: dict, audit_records: list[dict],
             f" pages_saved={_fmt(_fam_value(families, 'prefix_pages_saved_total'))}"
             f" cow_breaks={_fmt(_fam_value(families, 'kv_pool_cow_breaks_total'))}")
 
+    # -- per-phase cost attribution (profiler + CostLedger) ---------------
+    calls_fam = families.get("profiler_phase_calls_total", [])
+    if calls_fam:
+        lines.append("cost:")
+        dps = _fam_value(families, "profiler_dispatches_per_step")
+        if dps is not None:
+            lines.append(f"  dispatches/step @ max occupancy: {dps:.2f}")
+        lines.append(f"  {'phase':<16}{'calls':>7}{'disp':>7}"
+                     f"{'wall_ms':>9}{'sealed_B':>10}")
+        phases = sorted(lbl.get("phase", "?") for lbl, _ in calls_fam)
+        for ph in phases:
+            calls = _fam_value(families, "profiler_phase_calls_total",
+                               phase=ph) or 0
+            disp = _fam_value(families, "profiler_phase_dispatches_total",
+                              phase=ph) or 0
+            wall = _fam_value(families, "profiler_phase_wall_us_total",
+                              phase=ph) or 0.0
+            sealed = sum(v for lbl, v
+                         in families.get("cost_sealed_bytes_total", [])
+                         if lbl.get("phase") == ph)
+            lines.append(f"  {ph:<16}{_fmt(calls):>7}{_fmt(disp):>7}"
+                         f"{wall / 1e3:>9.2f}{_fmt(sealed):>10}")
+
     # -- per-tenant posture ---------------------------------------------
     if posture is None:
         posture = {}

@@ -89,6 +89,21 @@ class Tracer:
             ev["args"] = args
         self.events.append(ev)
 
+    def counter(self, name: str, values: dict, *, cat: str = "counter",
+                tid: int = TID_ENGINE, ts_us: float | None = None) -> None:
+        """One counter-track sample (ph "C").
+
+        Perfetto renders each (name, args key) series as a counter track
+        under the process; ``values`` maps series name -> numeric sample
+        (e.g. ``counter("dispatches", {"per_step": 2})`` per gateway step).
+        """
+        if not self.enabled:
+            return
+        self.events.append({
+            "name": name, "cat": cat, "ph": "C", "pid": self.pid,
+            "tid": tid, "ts": self.now_us() if ts_us is None else ts_us,
+            "args": {k: float(v) for k, v in values.items()}})
+
     def begin(self, key, name: str, *, cat: str = "serve",
               tid: int = TID_ENGINE, ts_us: float | None = None,
               args: dict | None = None) -> None:

@@ -144,11 +144,16 @@ class PagedEngine:
     max_pages: int                  # page-table columns per sequence
     prefill_chunk: int = 0          # tokens per prefill chunk (0 = max seq)
     tracer: object = None           # obs.Tracer for engine phase spans
+    profiler: object = None         # obs.Profiler — device-synchronized
+                                    # phase timing + dispatch counting
 
     def __post_init__(self):
         if self.tracer is None:
             from ..obs import Tracer
             self.tracer = Tracer(enabled=False)
+        if self.profiler is None:
+            from ..obs import Profiler
+            self.profiler = Profiler(enabled=False)
         if self.cfg.family not in ("dense",):
             raise ValueError(
                 f"PagedEngine supports dense transformers, got "
@@ -380,18 +385,26 @@ class PagedEngine:
         """
         active = np.asarray(active, bool)
         valid = np.asarray(valid, np.int32)
+        start_np = np.asarray(start, np.int32)
+        pt_np = np.asarray(page_tables, np.int32)
         n_lanes = int(active.sum())
         with self.tracer.span("engine.chunk_prefill", cat="engine",
-                              args={"lanes": n_lanes}):
+                              args={"lanes": n_lanes}), \
+                self.profiler.phase("prefill") as ph:
             tok, ok, arrays = self._chunk_prefill(
                 self.params, jnp.asarray(tokens, jnp.int32),
                 jnp.asarray(start, jnp.int32), jnp.asarray(valid, jnp.int32),
                 jnp.asarray(active), jnp.asarray(page_tables, jnp.int32),
                 self.pool.arrays())
             self.pool.update_arrays(arrays)
-        pages_written = int(sum(-(-int(v) // self.pool.page_size)
-                                for v, a in zip(valid, active) if a))
-        self.pool.note_prefill(pages_written)
+            ph.dispatch(arrays)
+        # per-lane page counts with the lane's owner (the tenant branded on
+        # its first written page) for the ledger's per-tenant attribution
+        ps = self.pool.page_size
+        lanes = [(self.pool.owner_of(int(pt_np[b, start_np[b] // ps])),
+                  -(-int(valid[b]) // ps))
+                 for b in range(active.shape[0]) if active[b]]
+        self.pool.note_prefill(sum(n for _, n in lanes), lanes=lanes)
         return np.asarray(tok), np.asarray(ok)
 
     # -- page close / reopen (open-page lifecycle) -----------------------
@@ -429,11 +442,14 @@ class PagedEngine:
             self.pool.note_close(page, account, True)
             return True
         with self.tracer.span("engine.close_page", cat="engine",
-                              args={"page": int(page), "account": account}):
+                              args={"page": int(page), "account": account}), \
+                self.profiler.phase("close",
+                                    tenant=self.pool.owner_of(page)) as ph:
             self.pool.spend_nonce(page)
             ok, arrays = self._close(self.pool.arrays(),
                                      jnp.asarray(page, jnp.int32))
             self.pool.update_arrays(arrays)
+            ph.dispatch(arrays)
         self.pool.note_close(page, account, bool(ok))
         return bool(ok)
 
@@ -465,12 +481,15 @@ class PagedEngine:
             self.pool.note_reopen(page, True)
             return True
         with self.tracer.span("engine.reopen_page", cat="engine",
-                              args={"page": int(page)}):
+                              args={"page": int(page)}), \
+                self.profiler.phase("reopen",
+                                    tenant=self.pool.owner_of(page)) as ph:
             self.pool.spend_nonce(page)
             ok, arrays = self._reopen(self.pool.arrays(),
                                       jnp.asarray(page, jnp.int32),
                                       jnp.asarray(fill, jnp.int32))
             self.pool.update_arrays(arrays)
+            ph.dispatch(arrays)
         self.pool.note_reopen(page, bool(ok))
         return bool(ok)
 
@@ -522,11 +541,14 @@ class PagedEngine:
         if was_open:
             ok = self.close_page(page, account="decode")
         with self.tracer.span("engine.renonce_page", cat="engine",
-                              args={"page": int(page)}):
+                              args={"page": int(page)}), \
+                self.profiler.phase("renonce",
+                                    tenant=self.pool.owner_of(page)) as ph:
             ok2, arrays = self._renonce(self.pool.arrays(),
                                         jnp.asarray(page, jnp.int32),
                                         jnp.asarray(fresh_nonce, jnp.uint32))
             self.pool.update_arrays(arrays)
+            ph.dispatch(arrays)
         ok = ok and bool(ok2)
         self.pool.renonce_guard(page, span)
         self.pool.note_renonce(page, ok)
@@ -571,13 +593,16 @@ class PagedEngine:
             self.pool.note_cow(src, dst, True)
             return True
         with self.tracer.span("engine.cow_page", cat="engine",
-                              args={"src": int(src), "dst": int(dst)}):
+                              args={"src": int(src), "dst": int(dst)}), \
+                self.profiler.phase("cow",
+                                    tenant=self.pool.owner_of(dst)) as ph:
             ok, arrays = self._cow(
                 self.pool.arrays(), jnp.asarray(src, jnp.int32),
                 jnp.asarray(dst, jnp.int32),
                 jnp.asarray(np.asarray(src_key_words, np.uint32)),
                 jnp.asarray(fill, jnp.int32))
             self.pool.update_arrays(arrays)
+            ph.dispatch(arrays)
         ok = bool(ok)
         self.pool.note_cow(src, dst, ok)
         return ok
@@ -701,14 +726,22 @@ class PagedEngine:
 
     def decode_step(self, tokens, seq_lens, active, page_tables, write_pp):
         """Host-side wrapper: threads the pool through the jitted body."""
-        n_act = int(np.asarray(active, bool).sum())
+        active_np = np.asarray(active, bool)
+        wp_np = np.asarray(write_pp, np.int32)
+        n_act = int(active_np.sum())
         with self.tracer.span("engine.decode_step", cat="engine",
-                              args={"lanes": n_act}):
+                              args={"lanes": n_act}), \
+                self.profiler.phase("decode") as ph:
             tok, ok, arrays = self._decode(
                 self.params, jnp.asarray(tokens, jnp.int32),
                 jnp.asarray(seq_lens, jnp.int32), jnp.asarray(active, bool),
                 jnp.asarray(page_tables, jnp.int32),
                 jnp.asarray(write_pp, jnp.int32), self.pool.arrays())
             self.pool.update_arrays(arrays)
-        self.pool.note_decode(n_act)
+            ph.dispatch(arrays)
+        # one charged token per active lane, attributed to the tenant that
+        # owns the lane's write page (seal_slot is fused in this dispatch)
+        owners = [self.pool.owner_of(int(p))
+                  for p, a in zip(wp_np, active_np) if a]
+        self.pool.note_decode(n_act, owners=owners)
         return np.asarray(tok), np.asarray(ok)

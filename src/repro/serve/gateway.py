@@ -35,7 +35,7 @@ import numpy as np
 
 from ..core.policy import SecurityConfig
 from ..obs import (AuditLog, MetricsRegistry, Monitor, MonitorConfig,
-                   Tracer, TID_ENGINE)
+                   Profiler, Tracer, TID_ENGINE)
 from ..obs import rules as obs_rules
 from ..store import SealedStore
 from .engine import PagedEngine
@@ -94,17 +94,21 @@ class SecureGateway:
         self.tracer.name_process("secure-gateway")
         self.tracer.name_thread(TID_ENGINE, "engine")
         self.registry = MetricsRegistry()
+        self.profiler = Profiler(registry=self.registry, tracer=self.tracer,
+                                 chunk_words=chunk_words)
         sealed = sec.enabled
         params_dev = provider.upload_tree(params) if sealed else params
         self.pool = PagedKVPool(
             n_pages=n_pages, page_size=page_size, n_layers=cfg.n_layers,
             n_kv_heads=cfg.n_kv_heads, hd=cfg.hd, dtype=cfg.act_dtype,
             chunk_words=chunk_words, sealed=sealed, open_pages=open_pages,
-            metrics=self.registry, audit=self.audit)
+            metrics=self.registry, audit=self.audit,
+            profiler=self.profiler)
         self.engine = PagedEngine(
             cfg=cfg, params=params_dev, channel=provider, pool=self.pool,
             max_slots=max_slots, max_pages=max_pages_per_seq,
-            prefill_chunk=prefill_chunk, tracer=self.tracer)
+            prefill_chunk=prefill_chunk, tracer=self.tracer,
+            profiler=self.profiler)
         # the prefix-cache publisher gets its own attested session: shared
         # prefix pages seal under per-entry keys derived from THIS channel,
         # never under the provider's weight/launch channel or a tenant key
@@ -147,6 +151,7 @@ class SecureGateway:
         totals, peak-live gauge) are exempt by construction."""
         self._t_start = time.monotonic()
         self.registry.reset()
+        self.profiler.reset_window()
 
     # -- tenant + request lifecycle -------------------------------------
     def register_tenant(self, tenant_id: str):
@@ -184,6 +189,7 @@ class SecureGateway:
         provider = self.sessions.channel(PROVIDER)
         active = [r.rid for r in self.scheduler.active]
         step_no = int(self._c_steps.value)
+        self.profiler.step_begin()
         with self.tracer.span("serve_step", cat="serve",
                               args={"step": step_no, "active": len(active),
                                     "queued": len(self.scheduler.queue)}):
@@ -191,6 +197,7 @@ class SecureGateway:
                 self.scheduler.step,
                 {"op": "serve_step", "step": step_no,
                  "queued": len(self.scheduler.queue), "active": active})
+        self.profiler.step_end(active=len(self.scheduler.active))
         dt_ms = (time.monotonic() - t0) * 1e3
         self._c_steps.inc()
         usable = max(1, self.pool.n_pages - 1)
@@ -359,6 +366,9 @@ class SecureGateway:
             "tokens_per_tenant": per_tenant,
             "kv_pages_peak": self.pool.stats["peak_live"],
             "kv_pages_free": self.pool.free_pages,
+            # ROADMAP item 1: jitted dispatches per step at max occupancy
+            "dispatches_per_step": self.profiler.dispatches_per_step(),
+            "dispatch_total": self.profiler.dispatch_total,
             "rotations": rotations,
             "launches_verified": self.sessions.channel(
                 PROVIDER).device_regs.last_nonce,
@@ -367,6 +377,11 @@ class SecureGateway:
     def metrics_text(self) -> str:
         """Prometheus text exposition of the whole registry."""
         return self.registry.to_prometheus()
+
+    def profile_report(self, model=None, clock_hz: float = 940e6) -> dict:
+        """Per-phase cost attribution + predicted-vs-measured drift table
+        (the BENCH_profile.json document) for the current window."""
+        return self.profiler.report(model=model, clock_hz=clock_hz)
 
     # -- trace + audit export --------------------------------------------
     def export_trace(self, path: str, fmt: str = "chrome") -> int:

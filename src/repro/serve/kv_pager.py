@@ -334,6 +334,10 @@ class PagedKVPool:
                                 # whole-page reseal per decode write)
     metrics: MetricsRegistry | None = None  # shared registry (gateway's)
     audit: object = None        # AuditLog sink for close/reopen/nonce events
+    profiler: object = None     # obs.Profiler — its CostLedger is charged
+                                # from the same note_* call sites (and with
+                                # the same byte formulas) as _c_sealed, so
+                                # per-bucket ledger sums reconcile exactly
 
     def __post_init__(self):
         shape = (self.n_pages, self.n_layers, self.page_size,
@@ -609,20 +613,51 @@ class PagedKVPool:
         self._c_cow_breaks.inc()
         if self.sealed:
             self._c_sealed["decode"].inc(2 * self.page_bytes)
+            self._charge("cow", self._owner.get(dst), 2 * self.page_bytes,
+                         "decode")
 
     # -- §3.4 cost accounting (the engine reports, the pool owns) --------
-    def note_prefill(self, pages_written: int) -> None:
-        """Charge a batched prefill chunk: whole pages sealed, k+v."""
+    def _charge(self, phase: str, tenant: str | None, nbytes: int,
+                bucket: str) -> None:
+        """Mirror a sealed-bytes charge into the profiler's CostLedger,
+        keyed (phase, tenant).  Called from the same sites (inside the
+        same ``if self.sealed`` guards, with the same formulas) as the
+        ``_c_sealed[bucket]`` increments — the exactness the ledger's
+        reconciliation tests rely on."""
+        if self.profiler is not None:
+            self.profiler.ledger.charge(phase, tenant, nbytes, bucket,
+                                        chunk_words=self.chunk_words)
+
+    def note_prefill(self, pages_written: int, lanes=()) -> None:
+        """Charge a batched prefill chunk: whole pages sealed, k+v.
+
+        lanes: optional [(owner, pages)] per active lane for per-tenant
+        ledger attribution; must sum to ``pages_written``."""
         if self.sealed:
             self._c_sealed["prefill"].inc(2 * self.page_bytes * pages_written)
+            if lanes:
+                for owner, n in lanes:
+                    self._charge("prefill", owner, 2 * self.page_bytes * n,
+                                 "prefill")
+            elif pages_written:
+                self._charge("prefill", None,
+                             2 * self.page_bytes * pages_written, "prefill")
 
-    def note_decode(self, n_tokens: int) -> None:
-        """Charge one decode step's write-backs (slot or whole-page)."""
+    def note_decode(self, n_tokens: int, owners=()) -> None:
+        """Charge one decode step's write-backs (slot or whole-page).
+
+        owners: optional per-token owner list (one entry per charged
+        token) for per-tenant ledger attribution."""
         self._c_decode_tokens.inc(n_tokens)
         if self.sealed:
             per = 2 * (self.slot_bytes if self.open_pages
                        else self.page_bytes)
             self._c_sealed["decode"].inc(n_tokens * per)
+            if owners:
+                for owner in owners:
+                    self._charge("decode", owner, per, "decode")
+            elif n_tokens:
+                self._charge("decode", None, n_tokens * per, "decode")
 
     def note_close(self, page: int, account: str, ok: bool) -> None:
         """Record an OPEN -> CLOSED transition (audit + cost counters).
@@ -632,6 +667,8 @@ class PagedKVPool:
         self._c_page_closes.inc()
         if self.sealed:
             self._c_sealed[account].inc(2 * self.page_bytes)
+            self._charge("close", self._owner.get(page), 2 * self.page_bytes,
+                         account)
         self._audit("page_close", page=page, account=account, ok=bool(ok))
 
     def note_reopen(self, page: int, ok: bool) -> None:
@@ -639,6 +676,8 @@ class PagedKVPool:
         self._c_page_reopens.inc()
         if self.sealed:
             self._c_sealed["swap"].inc(2 * self.page_bytes)
+            self._charge("reopen", self._owner.get(page),
+                         2 * self.page_bytes, "swap")
         self._audit("page_reopen", page=page, ok=bool(ok))
 
     def owner_of(self, page: int) -> str | None:
@@ -677,6 +716,8 @@ class PagedKVPool:
         self._c_page_renonces.inc()
         if self.sealed:
             self._c_sealed["decode"].inc(2 * self.page_bytes)
+            self._charge("renonce", self._owner.get(page),
+                         2 * self.page_bytes, "decode")
         self._audit("page_renonce", page=page, ok=bool(ok))
 
     def pages_of(self, owner: str) -> list[int]:

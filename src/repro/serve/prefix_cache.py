@@ -133,34 +133,42 @@ class PrefixRegistry:
             jnp.uint32(prefix_id), jnp.uint32(0x505246))  # "PRF"
         entry_key = np.array([int(y0), int(y1)], np.uint32)
         nonces = [ch.fresh_nonce(span=ps + 2) for _ in range(n_pages)]
-        pages = self.pool.alloc(n_pages, PREFIX_TENANT, entry_key, nonces,
-                                span=ps + 2)
-        first_token, ok = self._prefill(tokens, pages)
-        tail_fill = tokens.size % ps
-        if tail_fill:
-            # the boundary partial page is OPEN (slice tags); close it so
-            # every shared page is self-contained under whole-page tags
-            ok = self.engine.close_page(pages[-1], account="prefill") and ok
-        if not ok:
-            self.pool.free(pages)
-            raise RuntimeError(
-                "prefix prefill failed verification — not publishing")
-        self.pool.make_shared(pages)
-        chunks, _ = self.pool.export_pages(pages)
-        h = hashlib.sha256()
-        for name in sorted(chunks):
-            h.update(name.encode())
-            h.update(np.ascontiguousarray(chunks[name]).tobytes())
-        object_id = f"prefix/{h.hexdigest()[:16]}"
-        root = None
-        if not self.store.exists(object_id):     # content-hash dedup
-            manifest = self.store.put(
-                object_id, PREFIX_TENANT, chunks, key_bytes=ch.key_bytes,
-                kind=PREFIX_KIND, pinned=True, freshness=prefix_id,
-                nonce_epoch=ch.epoch,
-                meta={"prefix_id": prefix_id, "length": int(tokens.size),
-                      "n_pages": n_pages, "tail_fill": tail_fill})
-            root = manifest.get("merkle_root")
+        # umbrella phase: spans the nested prefill/close phases (which also
+        # time + charge themselves), so its own ledger row carries the
+        # publish wall time with 0 dispatches / 0 bytes of its own
+        with self.engine.profiler.phase("prefix_publish",
+                                        tenant=PREFIX_TENANT):
+            pages = self.pool.alloc(n_pages, PREFIX_TENANT, entry_key,
+                                    nonces, span=ps + 2)
+            first_token, ok = self._prefill(tokens, pages)
+            tail_fill = tokens.size % ps
+            if tail_fill:
+                # the boundary partial page is OPEN (slice tags); close it
+                # so every shared page is self-contained under whole-page
+                # tags
+                ok = self.engine.close_page(pages[-1],
+                                            account="prefill") and ok
+            if not ok:
+                self.pool.free(pages)
+                raise RuntimeError(
+                    "prefix prefill failed verification — not publishing")
+            self.pool.make_shared(pages)
+            chunks, _ = self.pool.export_pages(pages)
+            h = hashlib.sha256()
+            for name in sorted(chunks):
+                h.update(name.encode())
+                h.update(np.ascontiguousarray(chunks[name]).tobytes())
+            object_id = f"prefix/{h.hexdigest()[:16]}"
+            root = None
+            if not self.store.exists(object_id):     # content-hash dedup
+                manifest = self.store.put(
+                    object_id, PREFIX_TENANT, chunks,
+                    key_bytes=ch.key_bytes, kind=PREFIX_KIND, pinned=True,
+                    freshness=prefix_id, nonce_epoch=ch.epoch,
+                    meta={"prefix_id": prefix_id,
+                          "length": int(tokens.size),
+                          "n_pages": n_pages, "tail_fill": tail_fill})
+                root = manifest.get("merkle_root")
         entry = PrefixEntry(
             prefix_id=prefix_id, tokens=tokens, pages=pages,
             n_full=tokens.size // ps, tail_fill=tail_fill,

@@ -544,21 +544,26 @@ class Scheduler:
         self.tracer.instant("swap_out", cat="request",
                             tid=request_tid(victim.rid),
                             args={"rid": victim.rid, "pages": len(pages)})
-        chunks, victim.swap_nonces = self.pool.export_pages(pages)
-        # the nonce-span budget walks with the page across the swap: the
-        # retained nonces keep their accumulated bumps, so the guard must
-        # keep its accumulated spend too (else repeated preemption could
-        # silently overflow the reserved lane — keystream reuse)
-        victim.swap_spent = [self.pool.nonce_spent(p) for p in pages]
-        victim.swaps_out += 1
-        ch = self.sessions.channel(victim.tenant_id)
-        self.store.put(
-            swap_object_id(victim.rid), victim.tenant_id, chunks,
-            key_bytes=ch.key_bytes, kind=SWAP_KIND, pinned=True,
-            freshness=victim.swaps_out, nonce_epoch=ch.epoch,
-            meta={"rid": victim.rid, "n_pages": len(pages),
-                  "seq_len": victim.seq_len,
-                  "tokens_emitted": len(victim.tokens_out)})
+        # wall-only phase: the ciphertext export + store put are host copies
+        # (0 dispatches, 0 fresh sealed bytes — the tail close above charged
+        # its bytes to the "close" phase under the swap bucket already)
+        with self.engine.profiler.phase("swap_out",
+                                        tenant=victim.tenant_id):
+            chunks, victim.swap_nonces = self.pool.export_pages(pages)
+            # the nonce-span budget walks with the page across the swap: the
+            # retained nonces keep their accumulated bumps, so the guard must
+            # keep its accumulated spend too (else repeated preemption could
+            # silently overflow the reserved lane — keystream reuse)
+            victim.swap_spent = [self.pool.nonce_spent(p) for p in pages]
+            victim.swaps_out += 1
+            ch = self.sessions.channel(victim.tenant_id)
+            self.store.put(
+                swap_object_id(victim.rid), victim.tenant_id, chunks,
+                key_bytes=ch.key_bytes, kind=SWAP_KIND, pinned=True,
+                freshness=victim.swaps_out, nonce_epoch=ch.epoch,
+                meta={"rid": victim.rid, "n_pages": len(pages),
+                      "seq_len": victim.seq_len,
+                      "tokens_emitted": len(victim.tokens_out)})
         swapped_bytes = sum(c.nbytes for c in chunks.values())
         self._c_swaps["swap_outs"].inc()
         self._c_swaps["swapped_bytes"].inc(swapped_bytes)
@@ -592,12 +597,17 @@ class Scheduler:
             self._poison_unreadable(req, events)
             return
         n_pages = len(req.swap_nonces)
-        priv = self.pool.alloc(
-            n_pages, req.tenant_id,
-            self.sessions.channel(req.tenant_id).key_words, req.swap_nonces,
-            span=self.pool.page_size + 2, spent=req.swap_spent)
-        self.pool.write_pages(priv, chunks["k_ct"], chunks["v_ct"],
-                              chunks["k_tags"], chunks["v_tags"])
+        # wall-only phase: alloc + verbatim ciphertext install are host
+        # copies (0 dispatches, 0 fresh sealed bytes); the tail reopen below
+        # times itself under the "reopen" phase
+        with self.engine.profiler.phase("swap_in", tenant=req.tenant_id):
+            priv = self.pool.alloc(
+                n_pages, req.tenant_id,
+                self.sessions.channel(req.tenant_id).key_words,
+                req.swap_nonces,
+                span=self.pool.page_size + 2, spent=req.swap_spent)
+            self.pool.write_pages(priv, chunks["k_ct"], chunks["v_ct"],
+                                  chunks["k_tags"], chunks["v_tags"])
         # req.pages kept its shared prefix head across the swap
         req.pages = req.pages + priv
         self.store.delete(swap_object_id(req.rid))

@@ -22,11 +22,13 @@ except ImportError:
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
     from _hypothesis_stub import given, settings, st
 
-from repro.obs import (AuditLog, Counter, Gauge, Histogram, MetricError,
-                       MetricsRegistry, StatsView, Tracer, TID_ENGINE,
-                       chrome_trace, derive_audit_key, escape_label_value,
-                       jsonl_to_chrome, parse_prometheus, request_tid,
-                       verify_jsonl, verify_records)
+from repro.obs import (AuditLog, CostLedger, Counter, Gauge, Histogram,
+                       MetricError, MetricsRegistry, PHASES, Profiler,
+                       StatsView, Tracer, TID_ENGINE, chrome_trace,
+                       cipher_blocks_for, derive_audit_key,
+                       escape_label_value, jsonl_to_chrome, mac_ops_for,
+                       parse_prometheus, request_tid, verify_jsonl,
+                       verify_records)
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 KEY = b"\x07" * 32
@@ -430,3 +432,214 @@ def test_verify_audit_cli_empty_log(tmp_path):
     bare.write_text("")
     proc = _run_tool("verify_audit.py", bare, key)
     assert proc.returncode == 2 and "Traceback" not in proc.stderr
+
+
+# ---------------------------------------------------------------------------
+# cost ledger + profiler (obs/costs.py, obs/profiler.py)
+# ---------------------------------------------------------------------------
+
+def test_cost_ledger_column_math_and_registry_mirror():
+    """charge() derives cipher blocks (8-byte keystream words) and MAC/tag
+    ops (chunk_words granularity over 4-byte words) from the byte count,
+    and mirrors every column into labeled windowed counters."""
+    assert cipher_blocks_for(0) == 0 and cipher_blocks_for(1) == 1
+    assert cipher_blocks_for(8) == 1 and cipher_blocks_for(9) == 2
+    assert mac_ops_for(512, 128) == 1 and mac_ops_for(513, 128) == 2
+    reg = MetricsRegistry()
+    led = CostLedger(registry=reg, chunk_words=128)
+    led.charge("decode", "alice", 1024, "decode")
+    led.charge("decode", "bob", 512, "decode")
+    led.charge("prefill", "alice", 2048, "prefill")
+    led.time("decode", None, 100.0, calls=1, dispatches=1)
+    rows = {(r["phase"], r["tenant"]): r for r in led.rows()}
+    assert rows[("decode", "alice")]["sealed_bytes"] == 1024
+    assert rows[("decode", "alice")]["cipher_blocks"] == 128
+    assert rows[("decode", "alice")]["mac_ops"] == 2     # 256 words / 128
+    assert led.bucket_bytes == {"prefill": 2048, "decode": 1536, "swap": 0}
+    assert led.phase_totals()["decode"]["sealed_bytes"] == 1536
+    assert led.tenant_totals()["alice"]["sealed_bytes"] == 3072
+    fam = reg.family("cost_sealed_bytes_total")
+    by_labels = {dict(lbl)["phase"] + "/" + dict(lbl)["tenant"]: m.value
+                 for lbl, m in fam.items()}
+    assert by_labels == {"decode/alice": 1024, "decode/bob": 512,
+                         "prefill/alice": 2048}
+    assert reg.counter("profiler_phase_dispatches_total", "",
+                       phase="decode").value == 1
+
+
+def test_cost_ledger_reconcile_prices_with_the_model():
+    """The drift table prices each phase's bytes with the SAME
+    crypto_cycles the roofline model uses — a phase with no bytes gets
+    predicted 0 and ratio None (never a division crash)."""
+    class FlatModel:
+        name = "flat"
+
+        def crypto_cycles(self, n_bytes, encrypts=True, authenticates=True):
+            return float(n_bytes)                # 1 cycle per byte
+
+    led = CostLedger(chunk_words=128)
+    led.charge("decode", "a", 1000, "decode")
+    led.time("decode", "a", 5.0)
+    led.time("swap_out", "a", 7.0)               # wall-only phase, 0 bytes
+    rows = {r["phase"]: r for r in led.reconcile(FlatModel(),
+                                                 clock_hz=1e6)}
+    assert rows["decode"]["predicted_us"] == pytest.approx(1000.0)
+    assert rows["decode"]["ratio"] == pytest.approx(5.0 / 1000.0)
+    assert rows["swap_out"]["predicted_us"] == 0.0
+    assert rows["swap_out"]["ratio"] is None
+    assert set(rows) <= set(PHASES)
+
+
+def test_profiler_phase_timing_and_dispatch_counting():
+    prof = Profiler()
+    with prof.phase("decode") as ph:
+        ph.dispatch("result")
+        ph.dispatch("result")
+    with prof.phase("swap_out", tenant="alice"):
+        pass                                     # wall-only, no dispatches
+    assert prof.dispatch_total == 2
+    rows = {(r["phase"], r["tenant"]): r for r in prof.ledger.rows()}
+    assert rows[("decode", "-")]["dispatches"] == 2
+    assert rows[("decode", "-")]["calls"] == 1
+    assert rows[("decode", "-")]["wall_us"] > 0
+    assert rows[("swap_out", "alice")]["dispatches"] == 0
+
+
+def test_profiler_dispatches_per_step_at_max_occupancy():
+    """The ROADMAP item-1 metric averages only the steps at the window's
+    max occupancy — warm-up steps at lower occupancy don't dilute it."""
+    prof = Profiler()
+
+    def step(active, n_disp):
+        prof.step_begin()
+        with prof.phase("decode") as ph:
+            for _ in range(n_disp):
+                ph.dispatch(object())
+        return prof.step_end(active=active)
+
+    assert step(1, 5) == 5                       # warm-up, low occupancy
+    assert step(3, 1) == 1
+    assert step(3, 1) == 1
+    assert step(3, 4) == 4                       # a preemption-heavy step
+    assert prof.max_occupancy == 3
+    assert prof.dispatches_per_step() == pytest.approx(2.0)     # (1+1+4)/3
+    assert prof.dispatches_per_step(at_max_occupancy=False) == \
+        pytest.approx(11 / 4)
+    prof.reset_window()
+    assert prof.steps == 0 and prof.dispatches_per_step() == 0.0
+    assert prof.dispatch_total == 11             # lifetime survives
+
+
+def test_profiler_disabled_is_free():
+    prof = Profiler(enabled=False)
+    with prof.phase("decode") as ph:
+        ph.dispatch("x")
+    prof.step_begin()
+    assert prof.step_end(active=1) == 0
+    assert prof.dispatch_total == 0 and prof.ledger.rows() == []
+
+
+def test_profiler_emits_counter_tracks_per_step():
+    """step_end() drops one dispatches sample and one sealed-bytes sample
+    per bucket onto the trace's counter tracks (ph "C")."""
+    tr = Tracer()
+    prof = Profiler(tracer=tr)
+    prof.step_begin()
+    with prof.phase("decode") as ph:
+        ph.dispatch(object())
+    prof.ledger.charge("decode", "a", 256, "decode")
+    prof.step_end(active=2)
+    counters = [e for e in tr.drain() if e["ph"] == "C"]
+    by_name = {e["name"]: e["args"] for e in counters}
+    assert by_name["dispatches"] == {"per_step": 1.0}
+    assert by_name["sealed_bytes"] == {"prefill": 0.0, "decode": 256.0,
+                                       "swap": 0.0}
+
+
+def test_reset_zeroes_every_windowed_key_including_cost_families():
+    """One registry.reset() (+ profiler.reset_window()) returns EVERY
+    windowed metric to zero — including the per-phase cost counters the
+    ledger mirrors — with no per-family reset list to drift out of sync."""
+    reg = MetricsRegistry()
+    tr = Tracer(enabled=False)
+    prof = Profiler(registry=reg, tracer=tr)
+    life = reg.counter("kv_allocs_total", "", windowed=False)
+    life.inc(3)
+    reg.counter("tokens_total", "", tenant="alice").inc(7)
+    prof.step_begin()
+    with prof.phase("decode") as ph:
+        ph.dispatch(object())
+    prof.ledger.charge("decode", "alice", 4096, "decode")
+    prof.ledger.charge("close", "bob", 2048, "swap")
+    prof.step_end(active=1)
+    # the cost families exist and are non-zero before the reset
+    families = {m.name for m in reg.metrics()}
+    for fam in ("cost_sealed_bytes_total", "cost_cipher_blocks_total",
+                "cost_mac_ops_total", "profiler_phase_calls_total",
+                "profiler_phase_dispatches_total",
+                "profiler_phase_wall_us_total",
+                "profiler_dispatches_per_step"):
+        assert fam in families, fam
+    assert sum(m.value for m in reg.family(
+        "cost_sealed_bytes_total").values()) == 6144
+    reg.reset()
+    prof.reset_window()
+    for m in reg.metrics():
+        if m.windowed:
+            assert m.value == 0, f"windowed {m.name} survived reset"
+    assert life.value == 3                        # lifetime survives
+    assert prof.ledger.rows() == []
+    assert prof.ledger.bucket_bytes == {"prefill": 0, "decode": 0,
+                                        "swap": 0}
+    assert prof.dispatches_per_step() == 0.0
+
+
+def test_counter_tracks_roundtrip_trace2perfetto(tmp_path):
+    """Counter-track events survive the JSONL -> Chrome object conversion
+    byte-exact and every event satisfies the trace_event schema."""
+    tr = Tracer()
+    tr.name_process("gw")
+    with tr.span("serve_step"):
+        pass
+    tr.counter("dispatches", {"per_step": 2}, ts_us=10.0)
+    tr.counter("sealed_bytes", {"prefill": 0, "decode": 512, "swap": 0})
+    src, dst = tmp_path / "t.jsonl", tmp_path / "t.json"
+    n = tr.to_jsonl(src)
+    proc = _run_tool("trace2perfetto.py", src, dst)
+    assert proc.returncode == 0, proc.stderr
+    obj = json.loads(dst.read_text())
+    assert len(obj["traceEvents"]) == n
+    with open(src) as f:
+        assert jsonl_to_chrome(f) == obj
+    counters = [e for e in obj["traceEvents"] if e["ph"] == "C"]
+    assert len(counters) == 2
+    for ev in obj["traceEvents"]:
+        assert ev["ph"] in ("M", "X", "i", "C")
+        assert isinstance(ev["name"], str) and "pid" in ev
+        if ev["ph"] != "M":
+            assert isinstance(ev["ts"], (int, float)) and "tid" in ev
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0
+        if ev["ph"] == "C":
+            # counter samples: numeric series only, floats after emit
+            assert ev["args"] and all(
+                isinstance(v, float) for v in ev["args"].values())
+    assert counters[0]["ts"] == 10.0 and \
+        counters[0]["args"] == {"per_step": 2.0}
+
+
+def test_dash_renders_cost_section_from_profiler_families():
+    reg = MetricsRegistry()
+    prof = Profiler(registry=reg)
+    prof.step_begin()
+    with prof.phase("decode") as ph:
+        ph.dispatch(object())
+    prof.ledger.charge("decode", "alice", 1024, "decode")
+    prof.step_end(active=2)
+    from repro.obs import render
+    out = render(parse_prometheus(reg.to_prometheus()), [])
+    assert "cost:" in out
+    assert "dispatches/step @ max occupancy: 1.00" in out
+    decode_row = [ln for ln in out.splitlines()
+                  if ln.strip().startswith("decode")]
+    assert decode_row and "1024" in decode_row[0]

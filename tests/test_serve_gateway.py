@@ -429,7 +429,7 @@ def test_reset_metrics_zeroes_every_windowed_key(setup, gateway):
     reads zero — no matter which object owns the underlying metric — while
     lifetime allocator/session facts survive."""
     lifetime = {"elapsed_s", "kv_pages_peak", "kv_pages_free",
-                "rotations", "launches_verified"}
+                "rotations", "launches_verified", "dispatch_total"}
     before = gateway.metrics()
     assert before["tokens"] > 0 and before["swap_outs"] > 0
     assert gateway.pool.stats["allocs"] > 0

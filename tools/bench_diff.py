@@ -17,6 +17,15 @@ Both files must be the same artifact kind, autodetected from their
                     sealed_bytes_per_token, pages_per_request,
                     prefix_hit_rate
     micro           rows keyed by ``name``; compared metric: us_per_call
+    profile         BENCH_profile.json (gateway.profile_report()): the
+                    ``dispatch`` row gates dispatches_per_step (lower is
+                    better — a change that adds a jitted dispatch to the
+                    decode hot path fails here) and one ``phase/<name>``
+                    row per ledger phase gates the deterministic cost
+                    columns (calls, sealed_bytes, cipher_blocks, mac_ops).
+                    Wall time and the predicted-vs-measured ratio are
+                    reported in the artifact but never gated — they are
+                    machine-noisy.
 
 Comparison is *relative* and direction-aware: a lower-is-better metric
 regresses when ``current > baseline * (1 + tol)``; a higher-is-better one
@@ -40,6 +49,10 @@ SERVE_METRICS = ("tok_per_s", "p50_token_ms", "p95_token_ms",
                  "mean_ttft_ms", "sealed_bytes_per_token")
 BURST_METRICS = ("mean_ttft_ms", "sealed_bytes_per_token")
 PREFIX_METRICS = ("mean_ttft_ms", "pages_per_request", "prefix_hit_rate")
+# deterministic profile columns only: wall_us / predicted_us / ratio are
+# timing-noisy and excluded from the gate by construction
+PROFILE_PHASE_METRICS = ("calls", "dispatches", "sealed_bytes",
+                         "cipher_blocks", "mac_ops")
 HIGHER_BETTER = {"tok_per_s", "prefix_hit_rate"}
 
 
@@ -65,6 +78,12 @@ def rows_of(data: dict) -> dict:
     elif kind == "micro":
         for r in data.get("rows", []):
             rows[r["name"]] = {"us_per_call": r["us_per_call"]}
+    elif kind == "profile":
+        rows["dispatch"] = {
+            "dispatches_per_step": data["dispatches_per_step"]}
+        for p in data.get("phases", []):
+            rows[f"phase/{p['phase']}"] = {
+                k: p[k] for k in PROFILE_PHASE_METRICS if k in p}
     else:
         raise ValueError(f"unknown benchmark kind {kind!r}")
     return rows
